@@ -1,0 +1,51 @@
+"""Kernel-level microbenchmarks: the two compute hot-spots the paper's
+algorithms spend their time in.  On this CPU container we time the jnp
+oracle (the Pallas kernels target TPU and run here only under the
+interpreter); the derived column reports achieved GB/s / GFLOP/s so the
+roofline context is visible."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, timeit
+from repro.core.apriori import pack_bool_matrix, pack_itemsets
+from repro.kernels.ref import kmeans_assign_ref, support_count_ref
+
+
+def run():
+    rng = np.random.default_rng(0)
+
+    # kmeans assignment: N x K distance + argmin
+    n, d, k = 65_536, 32, 64
+    x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    c = jnp.asarray(rng.normal(size=(k, d)).astype(np.float32))
+    f = jax.jit(kmeans_assign_ref)
+    jax.block_until_ready(f(x, c))
+    dt = timeit(lambda: jax.block_until_ready(f(x, c)))
+    flops = 2 * n * d * k
+    row("kmeans_assign_jnp", dt, f"gflops={flops / dt / 1e9:.1f};N={n};D={d};K={k}")
+
+    # support counting: bitmap AND+match over (tx x candidates)
+    ntx, items, cands = 32_768, 128, 512
+    dense = rng.random((ntx, items)) < 0.2
+    tx = jnp.asarray(pack_bool_matrix(dense))
+    sets = [tuple(sorted(rng.choice(items, size=3, replace=False).tolist())) for _ in range(cands)]
+    masks = jnp.asarray(pack_itemsets(sets, items))
+    g = jax.jit(support_count_ref)
+    jax.block_until_ready(g(tx, masks))
+    dt = timeit(lambda: jax.block_until_ready(g(tx, masks)))
+    cells = ntx * cands * tx.shape[1]
+    row("support_count_jnp", dt, f"gcells={cells / dt / 1e9:.2f};tx={ntx};cands={cands}")
+
+    # Pallas kernels (interpret mode — correctness surface, not speed)
+    from repro.kernels import ops
+
+    dt = timeit(lambda: jax.block_until_ready(ops.kmeans_assign(x[:4096], c)), repeats=1, warmup=1)
+    row("kmeans_assign_pallas_interpret", dt, "interpret=True (CPU correctness mode)")
+
+
+if __name__ == "__main__":
+    run()

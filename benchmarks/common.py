@@ -1,0 +1,29 @@
+"""Shared benchmark utilities: timing + CSV emission.
+
+Every benchmark prints ``name,us_per_call,derived`` rows (one per paper
+table/figure entry) so ``python -m benchmarks.run`` output is machine
+readable end-to-end.
+"""
+
+from __future__ import annotations
+
+import time
+
+
+def timeit(fn, *args, repeats: int = 3, warmup: int = 1, **kw) -> float:
+    """Median wall seconds of fn(*args)."""
+    for _ in range(warmup):
+        fn(*args, **kw)
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn(*args, **kw)
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def row(name: str, seconds: float, derived: str = "") -> str:
+    line = f"{name},{seconds * 1e6:.1f},{derived}"
+    print(line, flush=True)
+    return line

@@ -1,0 +1,70 @@
+"""Aggregate experiments/dryrun/*.json into the §Roofline table.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.roofline_table            # markdown
+    PYTHONPATH=src python -m benchmarks.roofline_table --csv
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+DRYRUN = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+ARCH_ORDER = [
+    "phi-3-vision-4.2b", "phi3-mini-3.8b", "granite-20b", "stablelm-1.6b",
+    "gemma2-2b", "zamba2-1.2b", "mixtral-8x22b", "deepseek-moe-16b",
+    "xlstm-1.3b", "seamless-m4t-large-v2",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(mesh: str = "16x16", suffix: str = "") -> list[dict]:
+    out = []
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            p = DRYRUN / f"{arch}__{shape}__{mesh}{suffix}.json"
+            if p.exists():
+                out.append(json.loads(p.read_text()))
+    return out
+
+
+def fmt_row(r: dict, csv: bool = False) -> str:
+    sep = "," if csv else " | "
+    if r.get("status") == "SKIP":
+        cells = [r["arch"], r["shape"], "SKIP", "", "", "", "", "", ""]
+    else:
+        t = r["roofline"]
+        cells = [
+            r["arch"], r["shape"], r["kind"],
+            f"{t['t_compute_s']:.4g}", f"{t['t_memory_s']:.4g}", f"{t['t_collective_s']:.4g}",
+            t["dominant"], f"{t['roofline_fraction']:.3f}",
+            f"{r['model_vs_hlo_flops']:.2f}",
+        ]
+    return sep.join(cells) if csv else "| " + " | ".join(cells) + " |"
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--csv", action="store_true")
+    ap.add_argument("--mesh", default="16x16")
+    args = ap.parse_args(argv)
+
+    rows = load(args.mesh)
+    hdr = ["arch", "shape", "kind", "t_compute_s", "t_memory_s", "t_collective_s", "dominant", "roofline_frac", "model/hlo_flops"]
+    if args.csv:
+        print(",".join(hdr))
+    else:
+        print("| " + " | ".join(hdr) + " |")
+        print("|" + "---|" * len(hdr))
+    for r in rows:
+        print(fmt_row(r, args.csv))
+    ok = sum(1 for r in rows if r.get("status") == "OK")
+    skip = sum(1 for r in rows if r.get("status") == "SKIP")
+    print(f"\n{ok} OK, {skip} SKIP (of {len(rows)} recorded cells, mesh {args.mesh})")
+
+
+if __name__ == "__main__":
+    main()

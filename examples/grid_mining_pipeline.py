@@ -1,0 +1,95 @@
+"""End-to-end driver (the paper's kind): a distributed data-mining
+pipeline executed through the DAGMan-analog workflow engine with fault
+injection, rescue-restart and the grid overhead model.
+
+Stages (per the paper's experimental setup):
+  generate -> per-site local K-Means -> stat merge -> per-site Apriori ->
+  GFM global phase -> report, with site jobs failing (and retried), and
+  the whole run resumable from the rescue file.
+
+    PYTHONPATH=src python examples/grid_mining_pipeline.py
+"""
+
+import tempfile
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.apriori import TransactionDB, local_apriori
+from repro.core.gfm import gfm_mine
+from repro.core.kmeans import kmeans
+from repro.core.stats import stack_site_stats, SuffStats
+from repro.core.vclustering import merge_subclusters, paper_threshold
+from repro.data.synthetic import gaussian_mixture, ibm_transactions, split_sites, split_transactions
+from repro.workflow.dag import DAG
+from repro.workflow.engine import Engine
+from repro.workflow.faults import FaultInjector
+from repro.workflow.overhead import GridModel
+
+N_SITES = 4
+K_LOCAL = 8
+
+print("== building site datasets ==")
+pts, _ = gaussian_mixture(seed=0, n_points=6000, dim=2, n_components=4, spread=12.0, sigma=0.5)
+xs = split_sites(pts, N_SITES, seed=1)
+dense = ibm_transactions(seed=2, n_tx=4000, n_items=40, avg_tx_len=8, n_patterns=10)
+tx_sites = [TransactionDB.from_dense(s) for s in split_transactions(dense, N_SITES, seed=0)]
+
+dag = DAG("grid_mining")
+
+# --- clustering branch: local K-Means per site, then logical merge ---
+def make_cluster_job(i):
+    def job():
+        res = kmeans(jax.random.PRNGKey(i), jnp.asarray(xs[i]), K_LOCAL, iters=20)
+        return res.stats  # ONLY sufficient statistics leave the site
+
+    return job
+
+
+for i in range(N_SITES):
+    dag.job(f"cluster_{i}", make_cluster_job(i), site=i % 5,
+            input_bytes=xs[i].nbytes, output_bytes=K_LOCAL * (2 + 2) * 4)
+
+def merge_job(*site_stats):
+    flat = stack_site_stats(
+        SuffStats(
+            sizes=jnp.stack([s.sizes for s in site_stats]),
+            centers=jnp.stack([s.centers for s in site_stats]),
+            sse=jnp.stack([s.sse for s in site_stats]),
+        )
+    )
+    merged = merge_subclusters(flat, paper_threshold(flat, 2.0), criterion="increase")
+    return int(merged.n_global)
+
+dag.job("merge", merge_job, deps=[f"cluster_{i}" for i in range(N_SITES)])
+
+# --- itemset branch: local Apriori per site, single global phase ---
+for i in range(N_SITES):
+    dag.job(f"apriori_{i}", (lambda i=i: local_apriori(tx_sites[i], 4, int(0.08 * tx_sites[i].n_tx))),
+            site=i % 5, output_bytes=50_000)
+
+def gfm_job(*_):
+    return len(gfm_mine(tx_sites, 4, 0.08).frequent)
+
+dag.job("gfm_global", gfm_job, deps=[f"apriori_{i}" for i in range(N_SITES)])
+dag.job("report", lambda n_clusters, n_itemsets: (n_clusters, n_itemsets), deps=["merge", "gfm_global"])
+
+# --- run with injected faults + rescue file ---
+rescue = Path(tempfile.mkdtemp()) / "rescue.json"
+engine = Engine(
+    model=GridModel(),
+    faults=FaultInjector(fail={"cluster_2": 1, "apriori_0": 1}),  # transient site failures
+    rescue_path=rescue,
+    overlap_prep=True,
+    straggler_factor=4.0,
+)
+report = engine.run(dag)
+
+n_clusters, n_itemsets = dag.jobs["report"].result
+print(f"== pipeline result: {n_clusters} global clusters, {n_itemsets} frequent itemsets ==")
+print(f"simulated grid wall: {report.wall_s:.1f}s  (compute {report.compute_s:.2f}s, "
+      f"prep {report.prep_s:.1f}s, submit {report.submit_s:.1f}s)")
+print(f"retries after injected faults: {report.retries}; overhead {report.overhead_pct():.1f}%")
+print(f"rescue file: {rescue} (re-running resumes from the completed frontier)")

@@ -1,0 +1,41 @@
+"""Quickstart: the paper's two algorithms end-to-end in ~40 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.apriori import TransactionDB
+from repro.core.fdm import fdm_mine
+from repro.core.gfm import gfm_mine
+from repro.core.vclustering import VClusterConfig, vcluster_pooled
+from repro.data.synthetic import (
+    gaussian_mixture,
+    ibm_transactions,
+    split_sites,
+    split_transactions,
+)
+
+# ---- 1. variance-based distributed clustering (Algorithm 1) -------------
+pts, _ = gaussian_mixture(seed=0, n_points=8000, dim=2, n_components=5, spread=12.0, sigma=0.6)
+sites = split_sites(pts, n_sites=4, seed=1)  # 4 "grid sites"
+
+cfg = VClusterConfig(k_local=10, kmeans_iters=20, border_candidates=6)
+res = vcluster_pooled(jax.random.PRNGKey(0), jnp.asarray(sites), cfg)
+print(f"[clustering] sites=4 k_local=10 -> {int(res.merged.n_global)} global clusters "
+      f"after {int(res.merged.n_merges)} merges")
+print(f"[clustering] communication: {int(res.comm_bytes)} bytes of sufficient statistics "
+      f"(the raw data is {sites.size * 4} bytes — never moved)")
+
+# ---- 2. grid-based frequent itemset mining (Algorithm 2) ----------------
+dense = ibm_transactions(seed=1, n_tx=4000, n_items=48, avg_tx_len=8, n_patterns=10)
+dbs = [TransactionDB.from_dense(s) for s in split_transactions(dense, 4, seed=0)]
+
+g = gfm_mine(dbs, k=4, minsup=0.08)
+f = fdm_mine(dbs, k=4, minsup=0.08)
+assert g.frequent == f.frequent
+print(f"[itemsets] {len(g.frequent)} globally frequent itemsets (sizes 1..4)")
+print(f"[itemsets] GFM sync passes: {g.comm.rounds} | FDM sync passes: {f.comm.rounds} "
+      f"(paper: 2 vs 4)")

@@ -1,0 +1,106 @@
+"""Training driver: GridLocal (the paper's minimal-sync pattern) on a
+small LM with checkpoint/restart.
+
+Trains a reduced-config model for --steps steps on synthetic tokens with
+N simulated grid sites, merging every H inner steps, checkpointing every
+C steps, and (to demonstrate fault tolerance) killing and resuming the
+run halfway.  Communication ledger printed at the end.
+
+    PYTHONPATH=src python examples/train_gridlocal.py --steps 60
+"""
+
+import argparse
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.configs as C
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.data.pipeline import TokenStream
+from repro.models import transformer as T
+from repro.models.config import reduced
+from repro.optim.adamw import AdamWConfig
+from repro.optim.outer import OuterConfig, outer_init, outer_update
+from repro.train.steps import make_train_step, materialize_state
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm-1.6b", choices=C.ARCHS)
+    ap.add_argument("--steps", type=int, default=48)
+    ap.add_argument("--sites", type=int, default=2)
+    ap.add_argument("--h-steps", type=int, default=8)
+    ap.add_argument("--ckpt-every", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = reduced(C.get(args.arch)).scaled(vocab=512)
+    print(f"== GridLocal training: {cfg.name}, {T.param_count(cfg) / 1e6:.2f}M params, "
+          f"{args.sites} sites, merge every {args.h_steps} ==")
+
+    stream = TokenStream(vocab=cfg.vocab, global_batch=4 * args.sites, seq_len=64, seed=0,
+                         frontend_len=cfg.frontend_len if cfg.frontend != "none" else 0,
+                         d_model=cfg.d_model)
+    opt_cfg = AdamWConfig(lr=3e-3, warmup=5, decay_steps=args.steps)
+    inner_step = jax.jit(make_train_step(cfg, opt_cfg, loss_chunk=32))
+    outer_cfg = OuterConfig(h_steps=args.h_steps, outer_lr=0.7, outer_momentum=0.9)
+
+    ckdir = tempfile.mkdtemp()
+    ck = Checkpointer(ckdir, keep=2, async_mode=True)
+
+    # per-site replicas (the pod axis, simulated sequentially on CPU)
+    sites = [materialize_state(cfg, jax.random.PRNGKey(0)) for _ in range(args.sites)]
+    outer = outer_init(sites[0]["params"])
+    pbytes = sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(sites[0]["params"]))
+    sync_bytes = 0
+
+    def one_step(step):
+        nonlocal sites, outer, sync_bytes
+        batch = jax.tree.map(jnp.asarray, stream.batch_at(step))
+        losses = []
+        for s in range(args.sites):
+            sub = jax.tree.map(lambda x: x[s::args.sites], batch)
+            sites[s], m = inner_step(sites[s], sub)
+            losses.append(float(m["loss"]))
+        if (step + 1) % args.h_steps == 0:
+            merged = jax.tree.map(
+                lambda *xs: sum(x.astype(jnp.float32) for x in xs) / args.sites,
+                *[st["params"] for st in sites],
+            )
+            new_p, outer = outer_update(outer_cfg, outer, merged)
+            for st in sites:
+                st["params"] = new_p
+            sync_bytes += args.sites * pbytes
+        return float(np.mean(losses))
+
+    half = args.steps // 2
+    for step in range(half):
+        loss = one_step(step)
+        if (step + 1) % args.ckpt_every == 0:
+            ck.save(step + 1, {"sites": sites, "outer": outer})
+        if step % 8 == 0:
+            print(f"step {step:4d} loss {loss:.4f}")
+
+    # ---- simulated crash + rescue restart ----
+    ck.save(half, {"sites": sites, "outer": outer}, wait=True)
+    print(f"-- simulated node failure at step {half}; restoring from {ckdir} --")
+    like = {"sites": [materialize_state(cfg, jax.random.PRNGKey(1)) for _ in range(args.sites)],
+            "outer": outer_init(sites[0]["params"])}
+    restored = jax.tree.map(jnp.asarray, ck.restore(like))
+    sites, outer = restored["sites"], restored["outer"]
+
+    final_loss = None
+    for step in range(half, args.steps):
+        final_loss = one_step(step)
+        if step % 8 == 0:
+            print(f"step {step:4d} loss {final_loss:.4f}")
+
+    dp_bytes = args.steps * args.sites * pbytes
+    print(f"== done: final loss {final_loss:.4f} ==")
+    print(f"GridLocal cross-site traffic: {sync_bytes / 1e6:.1f} MB "
+          f"vs synchronous DP {dp_bytes / 1e6:.1f} MB  ({dp_bytes / max(sync_bytes, 1):.0f}x reduction)")
+
+
+if __name__ == "__main__":
+    main()

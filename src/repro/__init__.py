@@ -1,0 +1,35 @@
+"""repro — grid-based distributed data mining on multi-pod JAX.
+
+Reproduction + extension of:
+  Aouad, Le-Khac, Kechadi, "Grid-based Approaches for Distributed Data
+  Mining Applications" (2017).
+
+Lazy public API: submodules import jax at first use so that launch-time
+environment flags (XLA_FLAGS device-count overrides) can be set before
+any repro import triggers jax initialisation.
+"""
+
+__version__ = "0.1.0"
+
+_LAZY = {
+    "SuffStats": "repro.core.stats",
+    "merge_cost": "repro.core.stats",
+    "merge_stats": "repro.core.stats",
+    "kmeans": "repro.core.kmeans",
+    "kmeans_plus_plus_init": "repro.core.kmeans",
+    "gap_statistic": "repro.core.kmeans",
+    "VClusterConfig": "repro.core.vclustering",
+    "vcluster_pooled": "repro.core.vclustering",
+    "merge_subclusters": "repro.core.vclustering",
+    "gfm_mine": "repro.core.gfm",
+    "fdm_mine": "repro.core.fdm",
+}
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+
+        mod = importlib.import_module(_LAZY[name])
+        return getattr(mod, name)
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")

@@ -1,0 +1,46 @@
+"""Architecture registry: one module per assigned architecture.
+
+``get(name)`` returns the full published config; ``reduced(get(name))``
+gives the CPU-smoke-test version.  ``input_specs(cfg, shape)`` builds the
+ShapeAxes stand-ins for every model input of the (arch x shape) cell.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.shapes import SHAPES, input_specs, cell_is_supported, skip_reason  # noqa: F401
+from repro.models.config import ModelConfig, reduced  # noqa: F401
+
+ARCHS = [
+    "phi-3-vision-4.2b",
+    "phi3-mini-3.8b",
+    "granite-20b",
+    "stablelm-1.6b",
+    "gemma2-2b",
+    "zamba2-1.2b",
+    "mixtral-8x22b",
+    "deepseek-moe-16b",
+    "xlstm-1.3b",
+    "seamless-m4t-large-v2",
+]
+
+_MOD = {
+    "phi-3-vision-4.2b": "phi3_vision",
+    "phi3-mini-3.8b": "phi3_mini",
+    "granite-20b": "granite",
+    "stablelm-1.6b": "stablelm",
+    "gemma2-2b": "gemma2",
+    "zamba2-1.2b": "zamba2",
+    "mixtral-8x22b": "mixtral",
+    "deepseek-moe-16b": "deepseek_moe",
+    "xlstm-1.3b": "xlstm_1b",
+    "seamless-m4t-large-v2": "seamless",
+}
+
+
+def get(name: str) -> ModelConfig:
+    if name not in _MOD:
+        raise KeyError(f"unknown arch {name!r}; known: {ARCHS}")
+    mod = importlib.import_module(f"repro.configs.{_MOD[name]}")
+    return mod.CONFIG

@@ -1,0 +1,84 @@
+"""Assigned input-shape set and per-cell input specs.
+
+LM transformer shapes are seq_len x global_batch.  ``decode_*``/``long_*``
+lower ``serve_step`` (one new token against a seq_len KV cache), NOT
+``train_step``; ``prefill_*`` lowers the cache-building forward.
+``long_500k`` requires sub-quadratic attention — pure full-attention archs
+skip it (cfg.subquadratic gate, noted in DESIGN.md §Arch-applicability).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.models.config import ModelConfig
+from repro.models.layers import spec
+from repro.sharding import ShapeAxes
+
+
+@dataclass(frozen=True)
+class Shape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # 'train' | 'prefill' | 'decode'
+
+
+SHAPES = {
+    "train_4k": Shape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": Shape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": Shape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": Shape("long_500k", 524_288, 1, "decode"),
+}
+
+
+def cell_is_supported(cfg: ModelConfig, shape_name: str) -> bool:
+    sh = SHAPES[shape_name]
+    if sh.name == "long_500k" and not cfg.subquadratic:
+        return False
+    return True
+
+
+def skip_reason(cfg: ModelConfig, shape_name: str) -> str:
+    if not cell_is_supported(cfg, shape_name):
+        return (
+            "pure full-attention arch: 524k-token context is architecturally "
+            "unsupported (quadratic prefill, unwindowed cache) — see DESIGN.md"
+        )
+    return ""
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> dict:
+    """ShapeAxes tree for every model input of this (arch x shape) cell.
+
+    train:   {tokens, labels[, frontend]}
+    prefill: {tokens[, frontend]}            (cache passed separately)
+    decode:  {token, pos}                    (cache passed separately)
+    """
+    sh = SHAPES[shape_name]
+    b, s = sh.global_batch, sh.seq_len
+    tok_axes = ("batch", "seq")
+    if sh.kind == "train":
+        s_tok = s - (cfg.frontend_len if (cfg.frontend != "none" and not cfg.is_encdec) else 0)
+        out = {
+            "tokens": spec((b, s_tok), tok_axes, "int32"),
+            "labels": spec((b, s_tok), tok_axes, "int32"),
+        }
+        if cfg.frontend != "none":
+            out["frontend"] = spec(
+                (b, cfg.frontend_len, cfg.d_model), ("batch", "frontend", None), cfg.dtype
+            )
+        return out
+    if sh.kind == "prefill":
+        s_tok = s - (cfg.frontend_len if (cfg.frontend != "none" and not cfg.is_encdec) else 0)
+        out = {"tokens": spec((b, s_tok), tok_axes, "int32")}
+        if cfg.frontend != "none":
+            out["frontend"] = spec(
+                (b, cfg.frontend_len, cfg.d_model), ("batch", "frontend", None), cfg.dtype
+            )
+        return out
+    # decode
+    return {
+        "token": spec((b, 1), tok_axes, "int32"),
+        "pos": ShapeAxes(shape=(), dtype="int32", axes=()),
+    }

@@ -1,0 +1,237 @@
+"""Apriori substrate: packed-bitmap transaction DBs + candidate machinery.
+
+Transactions are bitmaps over a fixed item universe, packed 32 items/word
+(uint32).  Support counting — the compute hot-spot — is `AND + compare +
+reduce` over (transactions x candidates) tiles and is served either by the
+pure-jnp oracle here or by the Pallas TPU kernel in
+``repro.kernels.support_count`` (selected via ``count_backend``).
+
+Candidate *generation* (level-wise join + prune) is classic set algebra
+with data-dependent sizes; it stays on host exactly as in the paper, where
+the protocol is orchestrated at the grid-job level anyway.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from itertools import combinations
+from typing import Callable, Iterable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Itemset = tuple[int, ...]  # always sorted
+
+
+# ---------------------------------------------------------------------------
+# Packed-bitmap DB
+# ---------------------------------------------------------------------------
+
+
+def n_words(n_items: int) -> int:
+    return (n_items + 31) // 32
+
+
+def pack_bool_matrix(dense: np.ndarray) -> np.ndarray:
+    """(N, n_items) bool -> (N, W) uint32, bit i of word w = item 32*w+i."""
+    n, m = dense.shape
+    w = n_words(m)
+    padded = np.zeros((n, w * 32), dtype=bool)
+    padded[:, :m] = dense
+    bits = padded.reshape(n, w, 32)
+    weights = (1 << np.arange(32, dtype=np.uint64)).astype(np.uint64)
+    words = (bits.astype(np.uint64) * weights[None, None, :]).sum(axis=-1)
+    return words.astype(np.uint32)
+
+
+def pack_itemsets(itemsets: Sequence[Itemset], n_items: int) -> np.ndarray:
+    """List of itemsets -> (C, W) uint32 masks."""
+    w = n_words(n_items)
+    out = np.zeros((max(len(itemsets), 1), w), dtype=np.uint32)
+    for c, its in enumerate(itemsets):
+        for item in its:
+            out[c, item // 32] |= np.uint32(1) << np.uint32(item % 32)
+    return out
+
+
+@dataclass(frozen=True)
+class TransactionDB:
+    """One site's transaction database."""
+
+    packed: jax.Array  # (n_tx, W) uint32
+    n_items: int
+    n_tx: int
+
+    @staticmethod
+    def from_dense(dense: np.ndarray) -> "TransactionDB":
+        return TransactionDB(
+            packed=jnp.asarray(pack_bool_matrix(dense)),
+            n_items=dense.shape[1],
+            n_tx=dense.shape[0],
+        )
+
+
+# ---------------------------------------------------------------------------
+# Support counting (jnp oracle; kernel behind the same signature)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=())
+def _count_block(db: jax.Array, masks: jax.Array) -> jax.Array:
+    """(N, W) uint32, (C, W) uint32 -> (C,) int32 supports."""
+    hit = (db[:, None, :] & masks[None, :, :]) == masks[None, :, :]  # (N, C, W)
+    return jnp.sum(jnp.all(hit, axis=-1), axis=0).astype(jnp.int32)
+
+
+def count_supports(
+    db: TransactionDB,
+    itemsets: Sequence[Itemset],
+    backend: str = "jnp",
+    block_c: int = 512,
+) -> np.ndarray:
+    """Support counts for ``itemsets`` on one site's DB.  Returns (C,) int64."""
+    if not itemsets:
+        return np.zeros((0,), dtype=np.int64)
+    masks_np = pack_itemsets(itemsets, db.n_items)
+    if backend == "kernel":
+        from repro.kernels import ops
+
+        out = ops.support_count(db.packed, jnp.asarray(masks_np))
+        return np.asarray(out, dtype=np.int64)
+    outs = []
+    for s in range(0, masks_np.shape[0], block_c):
+        outs.append(np.asarray(_count_block(db.packed, jnp.asarray(masks_np[s : s + block_c]))))
+    return np.concatenate(outs).astype(np.int64)
+
+
+def item_supports(db: TransactionDB) -> np.ndarray:
+    """Singleton supports (L1 seed) via bit-unpack + column sum."""
+    words = np.asarray(db.packed)  # (N, W)
+    bits = ((words[:, :, None] >> np.arange(32, dtype=np.uint32)[None, None, :]) & 1).astype(np.int64)
+    cols = bits.reshape(words.shape[0], -1)[:, : db.n_items]
+    return cols.sum(axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Candidate generation (host-side set algebra)
+# ---------------------------------------------------------------------------
+
+
+def apriori_join(prev_frequent: Iterable[Itemset]) -> list[Itemset]:
+    """F(k-1) x F(k-1) prefix join + downward-closure prune."""
+    prev = sorted(set(prev_frequent))
+    prev_set = set(prev)
+    if not prev:
+        return []
+    k_1 = len(prev[0])
+    out = []
+    for a_i in range(len(prev)):
+        a = prev[a_i]
+        for b_i in range(a_i + 1, len(prev)):
+            b = prev[b_i]
+            if a[:-1] != b[:-1]:
+                break  # sorted ⇒ shared prefix block is contiguous
+            cand = a + (b[-1],)
+            # prune: every (k)-subset must be in prev_set
+            if all(tuple(sub) in prev_set for sub in combinations(cand, k_1)):
+                out.append(cand)
+    return out
+
+
+def subsets_of(itemset: Itemset) -> list[Itemset]:
+    """Immediate (size-1 smaller) subsets."""
+    return [tuple(s) for s in combinations(itemset, len(itemset) - 1)]
+
+
+# ---------------------------------------------------------------------------
+# Site-local Apriori (paper Alg 2 line 2: apriori_gen(X_i, k))
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class LocalMineResult:
+    """All itemsets COUNTED locally, with counts; `frequent[k]` lists the
+    locally frequent ones per level.  Counts are cached so the global phase
+    never re-counts something this site already measured."""
+
+    counts: dict[Itemset, int]
+    frequent: dict[int, list[Itemset]]
+    count_calls: int  # device count invocations (for perf accounting)
+    candidates_counted: int
+
+
+def local_apriori(
+    db: TransactionDB,
+    k_max: int,
+    min_count: int,
+    backend: str = "jnp",
+) -> LocalMineResult:
+    """Level-wise Apriori with LOCAL pruning only (GFM phase 1)."""
+    counts: dict[Itemset, int] = {}
+    frequent: dict[int, list[Itemset]] = {}
+    calls = 0
+    n_cand = 0
+
+    sup1 = item_supports(db)
+    for item, c in enumerate(sup1):
+        counts[(int(item),)] = int(c)
+    frequent[1] = [(int(i),) for i in np.nonzero(sup1 >= min_count)[0]]
+    calls += 1
+    n_cand += db.n_items
+
+    level = 1
+    while level < k_max and frequent.get(level):
+        cands = apriori_join(frequent[level])
+        level += 1
+        if not cands:
+            frequent[level] = []
+            break
+        sup = count_supports(db, cands, backend=backend)
+        calls += 1
+        n_cand += len(cands)
+        for its, c in zip(cands, sup):
+            counts[its] = int(c)
+        frequent[level] = [its for its, c in zip(cands, sup) if c >= min_count]
+    for lv in range(1, k_max + 1):
+        frequent.setdefault(lv, [])
+    return LocalMineResult(counts=counts, frequent=frequent, count_calls=calls, candidates_counted=n_cand)
+
+
+# ---------------------------------------------------------------------------
+# Brute-force oracle (tests)
+# ---------------------------------------------------------------------------
+
+
+def bruteforce_frequent(
+    dense_pooled: np.ndarray, k_max: int, min_count: int
+) -> dict[Itemset, int]:
+    """Exhaustive frequent itemsets of sizes 1..k_max over a pooled dense DB.
+
+    Exponential — tests only.  Uses downward closure for pruning.
+    """
+    n, m = dense_pooled.shape
+    cols = dense_pooled.astype(bool)
+    out: dict[Itemset, int] = {}
+    level: list[tuple[Itemset, np.ndarray]] = []
+    for i in range(m):
+        c = int(cols[:, i].sum())
+        if c >= min_count:
+            out[(i,)] = c
+            level.append(((i,), cols[:, i]))
+    for _ in range(2, k_max + 1):
+        fset = {its for its, _ in level}
+        nxt = []
+        for cand in apriori_join([its for its, _ in level]):
+            mask = np.ones(n, dtype=bool)
+            for item in cand:
+                mask &= cols[:, item]
+            c = int(mask.sum())
+            if c >= min_count:
+                out[cand] = c
+                nxt.append((cand, mask))
+        level = nxt
+        if not level:
+            break
+    return out

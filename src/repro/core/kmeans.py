@@ -1,0 +1,155 @@
+"""Local K-Means (Lloyd) + kmeans++ init + Gap-statistic model selection.
+
+This is the per-site "local clustering" stage of the paper's Algorithm 1.
+The assignment step (pairwise distance + argmin) is the compute hot-spot;
+``repro.kernels.ops.kmeans_assign`` provides the Pallas TPU kernel and this
+module falls back to the pure-jnp oracle on hosts without Mosaic.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.stats import SuffStats, pairwise_sq_dists, stats_from_assignment
+
+
+class KMeansResult(NamedTuple):
+    centers: jax.Array  # (k, D)
+    assign: jax.Array  # (N,) int32
+    inertia: jax.Array  # () total SSE
+    stats: SuffStats  # per-cluster sufficient statistics
+
+
+def _assign(x: jax.Array, centers: jax.Array, use_kernel: bool) -> tuple[jax.Array, jax.Array]:
+    """Nearest-center assignment; returns (assign (N,), min_d2 (N,))."""
+    if use_kernel:
+        from repro.kernels import ops
+
+        return ops.kmeans_assign(x, centers)
+    d2 = pairwise_sq_dists(x, centers)
+    return jnp.argmin(d2, axis=-1).astype(jnp.int32), jnp.min(d2, axis=-1)
+
+
+def kmeans_plus_plus_init(key: jax.Array, x: jax.Array, k: int) -> jax.Array:
+    """k-means++ seeding (Arthur & Vassilvitskii) with fixed-shape loops."""
+    n, d = x.shape
+    first = jax.random.randint(key, (), 0, n)
+    centers0 = jnp.zeros((k, d), x.dtype).at[0].set(x[first])
+
+    def body(i, carry):
+        centers, key = carry
+        key, sub = jax.random.split(key)
+        # distance to the nearest already-chosen center (mask unchosen slots)
+        d2 = pairwise_sq_dists(x, centers)  # (n, k)
+        valid = jnp.arange(k) < i
+        d2 = jnp.where(valid[None, :], d2, jnp.inf)
+        mind2 = jnp.min(d2, axis=-1)
+        probs = mind2 / jnp.maximum(jnp.sum(mind2), 1e-30)
+        idx = jax.random.choice(sub, n, p=probs)
+        return centers.at[i].set(x[idx]), key
+
+    centers, _ = jax.lax.fori_loop(1, k, body, (centers0, key))
+    return centers
+
+
+@functools.partial(jax.jit, static_argnames=("k", "iters", "use_kernel", "init"))
+def kmeans(
+    key: jax.Array,
+    x: jax.Array,
+    k: int,
+    iters: int = 25,
+    use_kernel: bool = False,
+    init: str = "kmeans++",
+) -> KMeansResult:
+    """Lloyd's algorithm with fixed iteration count (grid-friendly: no
+    data-dependent termination, identical work on every site).
+
+    Empty clusters are re-seeded at the point farthest from its center
+    (standard Lloyd repair), keeping k live clusters where possible.
+    """
+    n, d = x.shape
+    x = x.astype(jnp.float32)
+    if init == "kmeans++":
+        centers = kmeans_plus_plus_init(key, x, k)
+    else:
+        idx = jax.random.choice(key, n, shape=(k,), replace=False)
+        centers = x[idx]
+
+    def step(carry, _):
+        centers = carry
+        assign, mind2 = _assign(x, centers, use_kernel)
+        sizes = jax.ops.segment_sum(jnp.ones((n,), jnp.float32), assign, num_segments=k)
+        sums = jax.ops.segment_sum(x, assign, num_segments=k)
+        new_centers = sums / jnp.maximum(sizes, 1.0)[:, None]
+        # keep old center for empty clusters, then re-seed them at the
+        # globally farthest point (one at most per iteration — cheap repair)
+        new_centers = jnp.where((sizes > 0)[:, None], new_centers, centers)
+        far = jnp.argmax(mind2)
+        empty = sizes == 0
+        any_empty = jnp.any(empty)
+        first_empty = jnp.argmax(empty)  # first True, 0 if none
+        new_centers = jnp.where(
+            any_empty,
+            new_centers.at[first_empty].set(x[far]),
+            new_centers,
+        )
+        return new_centers, None
+
+    centers, _ = jax.lax.scan(step, centers, None, length=iters)
+    assign, mind2 = _assign(x, centers, use_kernel)
+    stats = stats_from_assignment(x, assign, k)
+    return KMeansResult(centers=stats.centers, assign=assign, inertia=jnp.sum(mind2), stats=stats)
+
+
+def _pooled_inertia(key, x, k, iters):
+    return kmeans(key, x, k, iters=iters).inertia
+
+
+def gap_statistic(
+    key: jax.Array,
+    x: jax.Array,
+    k_max: int,
+    n_ref: int = 4,
+    iters: int = 15,
+) -> tuple[int, jax.Array]:
+    """Gap statistic (Tibshirani et al.) for choosing k — the paper's
+    "approximation technique" for picking the number of sub-clusters.
+
+    Returns (k_hat, gaps[1..k_max]).  Reference sets are uniform over the
+    bounding box.  k_hat = smallest k with gap(k) >= gap(k+1) - s(k+1).
+    """
+    n, d = x.shape
+    lo = jnp.min(x, axis=0)
+    hi = jnp.max(x, axis=0)
+
+    ks = list(range(1, k_max + 1))
+    gaps = []
+    sks = []
+    for k in ks:
+        key, kd, kr = jax.random.split(key, 3)
+        wk = _pooled_inertia(kd, x, k, iters)
+        ref_keys = jax.random.split(kr, n_ref)
+
+        def one_ref(rk):
+            ku, kc = jax.random.split(rk)
+            ref = jax.random.uniform(ku, (n, d), minval=lo, maxval=hi)
+            return jnp.log(jnp.maximum(_pooled_inertia(kc, ref, k, iters), 1e-12))
+
+        logs = jnp.stack([one_ref(rk) for rk in ref_keys])
+        gap = jnp.mean(logs) - jnp.log(jnp.maximum(wk, 1e-12))
+        sk = jnp.std(logs) * jnp.sqrt(1.0 + 1.0 / n_ref)
+        gaps.append(gap)
+        sks.append(sk)
+
+    gaps_arr = jnp.stack(gaps)
+    sks_arr = jnp.stack(sks)
+    k_hat = k_max
+    for i in range(k_max - 1):
+        if bool(gaps_arr[i] >= gaps_arr[i + 1] - sks_arr[i + 1]):
+            k_hat = i + 1
+            break
+    return k_hat, gaps_arr

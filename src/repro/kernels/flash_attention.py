@@ -1,0 +1,125 @@
+"""Pallas TPU kernel: flash attention (forward) with GQA, causal,
+sliding-window and logit-softcap support.
+
+WHY (§Roofline): every dense-transformer train/prefill cell in the fleet
+is memory-dominated, and the breakdowns show the dominant streams are the
+flash-attention score/probability intermediates that XLA materialises in
+HBM between the QKᵀ and PV matmuls.  This kernel keeps the (Tq, Tk) score
+block, the online-softmax statistics and the output accumulator in VMEM:
+HBM traffic drops to  Q+K+V reads + O write  — the canonical flash
+result, here as the TPU-native adaptation (MXU matmuls on (Tq,Dh)x(Dh,Tk)
+blocks, VPU for the exp/max lane ops).
+
+Layout: q (BH, Sq, Dh), k/v (BKV, Skv, Dh) with BH = batch*heads and
+BKV = batch*kv_heads; the kv BlockSpec index_map folds the GQA group
+(bh -> bh // group) so grouped heads share K/V blocks WITHOUT a repeat.
+Grid (BH, Sq/Tq, Skv/Tk), kv innermost (sequential) — m/l/acc live in
+VMEM scratch across the kv iterations of one (bh, q-block).
+
+VMEM per program: Tq·Dh (q) + 2·Tk·Dh (kv) + Tq·Tk (scores f32) + acc
+≈ 128·128·4 + 2·256·128·2 + 128·256·4 + 128·128·4 ≈ 0.5 MB ≪ budget.
+
+Numerics match `repro.models.attention.chunked_attention` (the jnp
+oracle used for train/prefill) — validated in tests/test_kernels.py.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc_s, *, scale, causal, window, cap, tq, tk):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    q = q_ref[0].astype(jnp.float32) * scale  # (Tq, Dh)
+    k = k_ref[0].astype(jnp.float32)  # (Tk, Dh)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    if cap:
+        s = jnp.tanh(s / cap) * cap
+
+    q_pos = qi * tq + jax.lax.broadcasted_iota(jnp.int32, (tq, tk), 0)
+    k_pos = ki * tk + jax.lax.broadcasted_iota(jnp.int32, (tq, tk), 1)
+    mask = jnp.ones((tq, tk), jnp.bool_)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window:
+        mask &= q_pos - k_pos < window
+    s = jnp.where(mask, s, NEG)
+
+    m_prev = m_s[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    # rows with no valid key yet: keep p exactly 0 (m_new == NEG there)
+    p = jnp.where((m_new > NEG / 2)[:, None], p, 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_s[...] = l_s[...] * corr + jnp.sum(p, axis=-1)
+    m_s[...] = m_new
+    pv = jax.lax.dot_general(
+        p.astype(v_ref.dtype), v_ref[0], (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    acc_s[...] = acc_s[...] * corr[:, None] + pv
+
+    @pl.when(ki == pl.num_programs(2) - 1)
+    def _fin():
+        o_ref[0] = (acc_s[...] / jnp.maximum(l_s[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "cap", "block_q", "block_k", "interpret")
+)
+def flash_attention_pallas(
+    q: jax.Array,  # (BH, Sq, Dh)
+    k: jax.Array,  # (BKV, Skv, Dh) — BH % BKV == 0 (GQA)
+    v: jax.Array,  # (BKV, Skv, Dh)
+    causal: bool = True,
+    window: int = 0,
+    cap: float = 0.0,
+    block_q: int = 128,
+    block_k: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    bh, sq, dh = q.shape
+    bkv, skv, _ = k.shape
+    assert bh % bkv == 0
+    group = bh // bkv
+    tq = min(block_q, sq)
+    tk = min(block_k, skv)
+    assert sq % tq == 0 and skv % tk == 0, (sq, tq, skv, tk)
+    grid = (bh, sq // tq, skv // tk)
+    scale = 1.0 / math.sqrt(dh)
+    from jax.experimental.pallas import tpu as pltpu
+
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window, cap=cap, tq=tq, tk=tk
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tq, dh), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, tk, dh), lambda b, i, j, g=group: (b // g, j, 0)),
+            pl.BlockSpec((1, tk, dh), lambda b, i, j, g=group: (b // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tq, dh), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((tq,), jnp.float32),
+            pltpu.VMEM((tq,), jnp.float32),
+            pltpu.VMEM((tq, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

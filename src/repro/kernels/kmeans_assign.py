@@ -1,0 +1,69 @@
+"""Pallas TPU kernel: K-Means assignment (pairwise sq-distance + argmin).
+
+The hot inner loop of the paper's per-site local clustering.  TPU-native
+formulation: d²(x,c) = ‖x‖² + ‖c‖² − 2·x·cᵀ so the dominant term is a
+(TN×D)·(D×K) matmul that runs on the MXU; the argmin/min run on the VPU.
+
+Tiling: grid over N tiles.  Each program holds one (TN, D) block of points
+and the full (K, D) center set in VMEM (K and D are padded to the 128-lane
+boundary by ``ops.kmeans_assign``).  VMEM footprint per program:
+TN·D + K·D + TN·K floats — e.g. TN=256, D=128, K=128: ~49 KB·f32 ≪ 16 MB.
+
+Padding contract (enforced by the wrapper): padded D columns are zero in
+both x and centers (distances unchanged); padded K rows carry +BIG
+sentinel centers so they never win the argmin.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BIG = 1e30  # sentinel coordinate for padded center rows
+
+
+def _kernel(x_ref, c_ref, assign_ref, mind2_ref):
+    x = x_ref[...].astype(jnp.float32)  # (TN, D)
+    c = c_ref[...].astype(jnp.float32)  # (K, D)
+    x2 = jnp.sum(x * x, axis=-1, keepdims=True)  # (TN, 1)
+    c2 = jnp.sum(c * c, axis=-1)[None, :]  # (1, K)
+    # MXU: (TN, D) @ (D, K)
+    xc = jax.lax.dot_general(
+        x, c, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (TN, K)
+    d2 = x2 + c2 - 2.0 * xc
+    assign_ref[...] = jnp.argmin(d2, axis=-1).astype(jnp.int32)
+    mind2_ref[...] = jnp.maximum(jnp.min(d2, axis=-1), 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def kmeans_assign_pallas(
+    x: jax.Array,  # (N, D) f32 — N % block_n == 0, D % 128 == 0
+    centers: jax.Array,  # (K, D) f32 — K % 128 == 0, padded rows = BIG
+    block_n: int = 256,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    n, d = x.shape
+    k, d2_ = centers.shape
+    assert d == d2_ and n % block_n == 0, (x.shape, centers.shape, block_n)
+    grid = (n // block_n,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((k, d), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, centers)

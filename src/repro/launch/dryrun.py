@@ -1,0 +1,312 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# (the two lines above MUST precede every other import — jax locks the
+#  device count at first initialisation)
+
+"""Multi-pod dry-run: ``.lower().compile()`` every (architecture x input
+shape) cell on the production meshes and persist cost/memory/collective
+artifacts for the roofline analysis.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-2b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-2b --shape train_4k --multi-pod
+    PYTHONPATH=src python -m repro.launch.dryrun --all   # every cell, subprocess-isolated
+
+Outputs land in experiments/dryrun/<arch>__<shape>__<mesh>[__<rules>].json.
+"""
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+from pathlib import Path
+
+import jax
+
+import repro.configs as configs
+from repro.configs.shapes import SHAPES, cell_is_supported, input_specs, skip_reason
+from repro.launch.mesh import HW, make_production_mesh
+from repro.models import transformer as T
+from repro.roofline.analyze import roofline_terms
+from repro.roofline.hlo_costs import analyze_hlo
+from repro.sharding import (
+    BASELINE,
+    GRIDLOCAL,
+    Rules,
+    ShapeAxes,
+    activate,
+    specs_to_shardings,
+    specs_to_structs,
+)
+from repro.train import steps as steps_mod
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+_IS_SA = lambda x: isinstance(x, ShapeAxes)
+
+
+def _as_dtype(tree, dtype: str):
+    return jax.tree.map(
+        lambda s: ShapeAxes(shape=s.shape, dtype=dtype if s.dtype.startswith("float") or s.dtype.startswith("bf") else s.dtype, axes=s.axes),
+        tree,
+        is_leaf=_IS_SA,
+    )
+
+
+def get_rules(name: str) -> Rules:
+    from repro import sharding as sh
+
+    table = {"baseline": BASELINE, "gridlocal": GRIDLOCAL}
+    if name in table:
+        return table[name]
+    # experiment rules registered by the perf loop
+    from repro.roofline import rule_variants
+
+    return rule_variants.get(name)
+
+
+def build_lowered(
+    arch: str, shape_name: str, multi_pod: bool, rules_name: str, gridlocal: bool,
+    grad_accum: int = 1, mesh_variant: str = "", cfg_overrides: dict | None = None,
+):
+    cfg = configs.get(arch)
+    if cfg_overrides:
+        cfg = cfg.scaled(**cfg_overrides)
+    sh = SHAPES[shape_name]
+    if mesh_variant:
+        from repro.launch.mesh import make_variant_mesh
+
+        mesh = make_variant_mesh(mesh_variant, multi_pod=multi_pod)
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    if gridlocal and rules_name == "baseline":
+        rules_name = "gridlocal"  # batch must NOT shard over pod; grid axis does
+    rules = get_rules(rules_name)
+    batch_specs = input_specs(cfg, shape_name)
+
+    with activate(mesh, rules):
+        if sh.kind == "train" and gridlocal:
+            assert multi_pod, "GridLocal needs the pod axis"
+            n_pods = mesh.shape["pod"]
+            state_specs = steps_mod.train_state_specs(cfg, n_pods=n_pods)
+            fn = steps_mod.make_gridlocal_train_step(cfg, mesh, grad_accum=grad_accum)
+            st_sh = specs_to_shardings(state_specs, GRIDLOCAL, mesh)
+            b_sh = specs_to_shardings(batch_specs, rules, mesh)
+            jfn = jax.jit(fn, in_shardings=(st_sh, b_sh), out_shardings=(st_sh, None), donate_argnums=0)
+            args = (specs_to_structs(state_specs, GRIDLOCAL, mesh), specs_to_structs(batch_specs, rules, mesh))
+            lowered = jfn.lower(*args)
+        elif sh.kind == "train":
+            state_specs = steps_mod.train_state_specs(cfg)
+            fn = steps_mod.make_train_step(cfg, grad_accum=grad_accum)
+            st_sh = specs_to_shardings(state_specs, rules, mesh)
+            b_sh = specs_to_shardings(batch_specs, rules, mesh)
+            jfn = jax.jit(fn, in_shardings=(st_sh, b_sh), out_shardings=(st_sh, None), donate_argnums=0)
+            lowered = jfn.lower(
+                specs_to_structs(state_specs, rules, mesh), specs_to_structs(batch_specs, rules, mesh)
+            )
+        else:
+            param_specs = _as_dtype(T.param_specs(cfg), cfg.dtype)  # bf16 serving weights
+            cache_specs = T.cache_specs(cfg, sh.global_batch, sh.seq_len)
+            p_sh = specs_to_shardings(param_specs, rules, mesh)
+            c_sh = specs_to_shardings(cache_specs, rules, mesh)
+            b_sh = specs_to_shardings(batch_specs, rules, mesh)
+            if sh.kind == "prefill":
+                fn = steps_mod.make_prefill_step(cfg)
+            else:
+                fn = steps_mod.make_decode_step(cfg)
+            jfn = jax.jit(fn, in_shardings=(p_sh, b_sh, c_sh), out_shardings=(None, c_sh), donate_argnums=2)
+            lowered = jfn.lower(
+                specs_to_structs(param_specs, rules, mesh),
+                specs_to_structs(batch_specs, rules, mesh),
+                specs_to_structs(cache_specs, rules, mesh),
+            )
+    return cfg, sh, mesh, lowered
+
+
+HBM_BUDGET = 16e9  # v5e per-chip HBM
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool,
+    rules_name: str = "baseline",
+    gridlocal: bool = False,
+    save: bool = True,
+    grad_accum: int = 0,  # 0 = auto: double until the step fits HBM (<=8)
+    mesh_variant: str = "",
+    cfg_overrides: dict | None = None,
+) -> dict:
+    cfg = configs.get(arch)
+    if not cell_is_supported(cfg, shape_name):
+        rec = {
+            "arch": arch, "shape": shape_name, "mesh": "2x16x16" if multi_pod else "16x16",
+            "rules": rules_name, "status": "SKIP", "reason": skip_reason(cfg, shape_name),
+        }
+        if save:
+            _save(rec, arch, shape_name, multi_pod, rules_name, gridlocal)
+        return rec
+
+    auto = grad_accum == 0
+    accum = max(grad_accum, 1)
+    while True:
+        rec = _run_cell_once(arch, shape_name, multi_pod, rules_name, gridlocal, accum, mesh_variant, cfg_overrides)
+        peak = rec["memory"]["peak_est_bytes"]
+        if (
+            auto
+            and rec["kind"] == "train"
+            and peak > HBM_BUDGET
+            and accum < 8
+        ):
+            print(f"[dryrun] peak {peak/1e9:.1f} GB > HBM; retrying with grad_accum={accum*2}")
+            accum *= 2
+            continue
+        break
+    if save:
+        _save(rec, arch, shape_name, multi_pod, rules_name, gridlocal)
+    return rec
+
+
+def _run_cell_once(arch, shape_name, multi_pod, rules_name, gridlocal, grad_accum, mesh_variant="", cfg_overrides=None) -> dict:
+    sh = SHAPES[shape_name]
+    t0 = time.time()
+    cfg, sh, mesh, lowered = build_lowered(arch, shape_name, multi_pod, rules_name, gridlocal, grad_accum, mesh_variant, cfg_overrides)
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    t0 = time.time()
+    hlo = compiled.as_text()
+    costs = analyze_hlo(hlo, chips_per_pod=256)  # trip-count-aware per-device costs
+    t_analyze = time.time() - t0
+
+    chips = 512 if multi_pod else 256
+    n_params = T.param_count(cfg)
+    n_active = T.active_param_count(cfg)
+    if sh.kind == "train":
+        tokens = sh.global_batch * sh.seq_len
+        model_flops = 6 * n_active * tokens
+    elif sh.kind == "prefill":
+        tokens = sh.global_batch * sh.seq_len
+        model_flops = 2 * n_active * tokens
+    else:
+        tokens = sh.global_batch
+        model_flops = 2 * n_active * tokens
+
+    flops = costs.flops  # per-device, while-loops multiplied by trip count
+    byts = costs.traffic_bytes
+    terms = roofline_terms(flops, byts, costs.coll_bytes_total, chips, HW, per_device=True)
+
+    def _m(attr):
+        return int(getattr(mem, attr, 0) or 0)
+
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "kind": sh.kind,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips,
+        "rules": rules_name,
+        "gridlocal": gridlocal,
+        "status": "OK",
+        "n_params": n_params,
+        "n_active_params": n_active,
+        "tokens_per_step": tokens,
+        "model_flops": model_flops,
+        "hlo_flops_per_device": flops,
+        "hlo_bytes_per_device": byts,
+        "model_vs_hlo_flops": model_flops / max(flops * chips, 1e-30),
+        "collectives": costs.as_dict(),
+        "cost_analysis_raw": {  # XLA's own numbers (while bodies counted ONCE)
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        },
+        "memory": {
+            "argument_bytes": _m("argument_size_in_bytes"),
+            "output_bytes": _m("output_size_in_bytes"),
+            "temp_bytes": _m("temp_size_in_bytes"),
+            "alias_bytes": _m("alias_size_in_bytes"),
+            "generated_code_bytes": _m("generated_code_size_in_bytes"),
+            "peak_est_bytes": _m("argument_size_in_bytes") + _m("output_size_in_bytes") + _m("temp_size_in_bytes") - _m("alias_size_in_bytes"),
+        },
+        "roofline": terms,
+        "grad_accum": grad_accum,
+        "timing": {"lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2), "analyze_s": round(t_analyze, 2)},
+    }
+    return rec
+
+
+def _save(rec, arch, shape_name, multi_pod, rules_name, gridlocal):
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    mesh_tag = "2x16x16" if multi_pod else "16x16"
+    tag = f"{arch}__{shape_name}__{mesh_tag}"
+    if rules_name != "baseline":
+        tag += f"__{rules_name}"
+    if gridlocal:
+        tag += "__gridlocal"
+    path = OUT_DIR / f"{tag}.json"
+    path.write_text(json.dumps(rec, indent=2))
+    print(f"[dryrun] wrote {path}")
+
+
+def _summ(rec: dict) -> str:
+    if rec.get("status") == "SKIP":
+        return f"SKIP ({rec['reason'][:60]}...)"
+    r = rec["roofline"]
+    return (
+        f"OK flops/dev={rec['hlo_flops_per_device']:.3e} bytes/dev={rec['hlo_bytes_per_device']:.3e} "
+        f"coll={rec['collectives']['total_bytes']:.3e} dom={r['dominant']} "
+        f"frac={r['roofline_fraction']:.3f} compile={rec['timing']['compile_s']}s"
+    )
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=configs.ARCHS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--rules", default="baseline")
+    ap.add_argument("--gridlocal", action="store_true")
+    ap.add_argument("--all", action="store_true", help="run every cell in subprocesses")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--grad-accum", type=int, default=0, help="0 = auto-fit HBM")
+    args = ap.parse_args(argv)
+
+    if args.all:
+        import subprocess
+
+        cells = [(a, s, mp) for a in configs.ARCHS for s in SHAPES for mp in (False, True)]
+        failures = []
+        for a, s, mp in cells:
+            mesh_tag = "2x16x16" if mp else "16x16"
+            out = OUT_DIR / f"{a}__{s}__{mesh_tag}.json"
+            if args.skip_existing and out.exists():
+                print(f"[dryrun] skip existing {out.name}")
+                continue
+            cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", a, "--shape", s]
+            if mp:
+                cmd.append("--multi-pod")
+            print("[dryrun] >>>", " ".join(cmd), flush=True)
+            r = subprocess.run(cmd, env={**os.environ})
+            if r.returncode != 0:
+                failures.append((a, s, mp))
+        if failures:
+            print("[dryrun] FAILURES:", failures)
+            sys.exit(1)
+        print("[dryrun] all cells OK")
+        return
+
+    assert args.arch and args.shape, "--arch/--shape required (or --all)"
+    rec = run_cell(args.arch, args.shape, args.multi_pod, args.rules, args.gridlocal, grad_accum=args.grad_accum)
+    print(f"[dryrun] {args.arch} x {args.shape} ({rec['mesh']}): {_summ(rec)}")
+    if rec.get("status") == "OK":
+        print(json.dumps(rec["roofline"], indent=2))
+        print(json.dumps(rec["memory"], indent=2))
+
+
+if __name__ == "__main__":
+    main()

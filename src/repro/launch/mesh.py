@@ -1,0 +1,60 @@
+"""Production mesh construction.
+
+Kept as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state — the dry-run must set
+XLA_FLAGS=--xla_force_host_platform_device_count BEFORE first jax init.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips).
+
+    Axes: `pod` is the DCN-crossing grid-site axis (the paper's "site"),
+    `data` is intra-pod DP/FSDP, `model` is TP/EP.  The dry-run environment
+    exposes 512 placeholder devices; the single-pod mesh uses the first 256.
+    """
+    import math
+
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = math.prod(shape)
+    devs = jax.devices()[:need]
+    return jax.make_mesh(shape, axes, devices=devs)
+
+
+def make_variant_mesh(name: str, *, multi_pod: bool = False):
+    """Hillclimbing mesh variants (same chip counts as production).
+
+    'moe2d': (data, expert, model) = (16, 8, 2) — factorises the 256-chip
+    pod so coarse-expert MoEs (mixtral: 8 experts) get true expert
+    parallelism instead of TP-within-expert (§Perf iteration)."""
+    if name == "moe2d":
+        shape = (2, 16, 8, 2) if multi_pod else (16, 8, 2)
+        axes = ("pod", "data", "expert", "model") if multi_pod else ("data", "expert", "model")
+        import math
+
+        devs = jax.devices()[: math.prod(shape)]
+        return jax.make_mesh(shape, axes, devices=devs)
+    raise KeyError(name)
+
+
+def make_test_mesh(n_data: int = 2, n_model: int = 2, n_pods: int = 0):
+    """Small mesh for multi-device CPU tests (subprocesses set
+    xla_force_host_platform_device_count accordingly)."""
+    if n_pods:
+        return jax.make_mesh((n_pods, n_data, n_model), ("pod", "data", "model"))
+    return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+# TPU v5e hardware model used by the roofline analysis (per chip).
+HW = {
+    "peak_flops_bf16": 197e12,  # FLOP/s
+    "hbm_bw": 819e9,  # B/s
+    "ici_bw": 50e9,  # B/s per link (~ per-direction)
+    "chips_per_pod": 256,
+    "dcn_bw": 6.25e9,  # B/s per host NIC-ish; used for pod-crossing notes
+}

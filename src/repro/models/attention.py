@@ -1,0 +1,245 @@
+"""GQA attention: chunked (flash-style, online-softmax) for train/prefill,
+cached single-token decode, sliding-window + logit-softcap variants, and
+cross-attention for the enc-dec architecture.
+
+Memory discipline: scores are never materialised at (Sq, Skv) — the KV axis
+is processed in chunks under ``lax.scan`` with running (max, denom, acc),
+which is what lets the 32k-prefill shapes fit the dry-run memory budget.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, norm_spec, apply_norm, softcap, spec
+from repro.sharding import constrain
+
+NEG = -1e30
+PAD_POS = 1 << 29  # sentinel position for padded KV slots (always masked)
+
+
+def attn_spec(cfg, cross: bool = False) -> dict:
+    d = cfg.d_model
+    p = {
+        "wq": spec((d, cfg.n_heads, cfg.head_dim), ("embed", "heads", "head_dim")),
+        "wk": spec((d, cfg.n_kv_heads, cfg.head_dim), ("embed", "kv_heads", "head_dim")),
+        "wv": spec((d, cfg.n_kv_heads, cfg.head_dim), ("embed", "kv_heads", "head_dim")),
+        "wo": spec((cfg.n_heads, cfg.head_dim, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = norm_spec(cfg, cfg.head_dim)
+        p["k_norm"] = norm_spec(cfg, cfg.head_dim)
+    return p
+
+
+def _project_qkv(cfg, p, x, kv_x):
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", kv_x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", kv_x, p["wv"].astype(dt))
+    q = constrain(q, ("batch", "seq", "heads", None))
+    k = constrain(k, ("batch", "seq", "kv_heads", None))
+    v = constrain(v, ("batch", "seq", "kv_heads", None))
+    return q, k, v
+
+
+def _grouped(q, n_kv: int):
+    """(B, S, H, Dh) -> (B, S, Kv, G, Dh) splitting query heads into KV groups."""
+    b, s, h, dh = q.shape
+    return q.reshape(b, s, n_kv, h // n_kv, dh)
+
+
+def chunked_attention(
+    q: jax.Array,  # (B, Sq, Kv, G, Dh) — grouped query heads
+    k: jax.Array,  # (B, Sk, Kv, Dh)
+    v: jax.Array,  # (B, Sk, Kv, Dh)
+    q_pos: jax.Array,  # (Sq,) int32
+    k_pos: jax.Array,  # (Sk,) int32
+    causal: bool,
+    window: int = 0,
+    cap: float = 0.0,
+    chunk: int = 1024,
+) -> jax.Array:
+    """Online-softmax attention, scanning the KV axis in chunks."""
+    b, sq, kvh, g, dh = q.shape
+    sk = k.shape[1]
+    scale = 1.0 / math.sqrt(dh)
+    chunk = min(chunk, sk)
+    if sk % chunk:  # pad KV to a chunk multiple; sentinel positions mask out
+        pad = chunk - sk % chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.concatenate([k_pos, jnp.full((pad,), PAD_POS, jnp.int32)])
+        sk += pad
+    n_chunks = sk // chunk
+
+    qf = (q * scale).astype(q.dtype)
+    ks = k.reshape(b, n_chunks, chunk, kvh, dh).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(b, n_chunks, chunk, kvh, dh).transpose(1, 0, 2, 3, 4)
+    kps = k_pos.reshape(n_chunks, chunk)
+
+    # statically-redundant mask terms are dropped (a window >= kv-length
+    # masks nothing beyond causality).  §Perf iterations: probabilities go
+    # to the compute dtype immediately (halves the flash intermediate
+    # traffic) and the full (Sq, C) "fully-masked row" where() is replaced
+    # by a per-ROW validity vector — for rows with any valid key,
+    # exp(NEG - m_new) already underflows to exactly 0.0.
+    use_window = bool(window) and window < sk
+
+    @jax.checkpoint  # flash-style backward: scores/probs recomputed per
+    # chunk from (q, kc, vc) — never stored across the KV scan (this is
+    # what keeps train/prefill memory linear in S instead of quadratic)
+    def body(carry, inp):
+        m, l, acc = carry
+        kc, vc, kp = inp  # (B, C, Kv, Dh), (B, C, Kv, Dh), (C,)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kc.astype(qf.dtype))  # (B,Kv,G,Sq,C)
+        s = s.astype(jnp.float32)
+        if cap:
+            s = softcap(s, cap)
+        mask = kp[None, :] < PAD_POS  # padded KV slots never attend
+        mask = jnp.broadcast_to(mask, (sq, kp.shape[0]))
+        if causal:
+            mask &= q_pos[:, None] >= kp[None, :]
+        if use_window:
+            mask &= q_pos[:, None] - kp[None, :] < window
+        s = jnp.where(mask[None, None, None], s, NEG)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None]).astype(vc.dtype)
+        # per-row guard against fully-masked chunks (future causal chunks,
+        # all-pad chunks, out-of-window chunks): (Sq,) instead of (Sq, C)
+        kp_max_real = jnp.max(jnp.where(kp < PAD_POS, kp, -1))
+        row_valid = jnp.broadcast_to(kp[0] < PAD_POS, (sq,))
+        if causal:
+            row_valid &= q_pos >= kp[0]
+        if use_window:
+            row_valid &= q_pos - kp_max_real < window
+        p = p * row_valid[None, None, None, :, None].astype(p.dtype)
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p.astype(jnp.float32), axis=-1)
+        pv = jnp.einsum("bhgqk,bkhd->bhgqd", p, vc)
+        acc = acc * corr[..., None].astype(acc.dtype) + pv
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((b, kvh, g, sq), NEG, jnp.float32)
+    l0 = jnp.zeros((b, kvh, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, kvh, g, sq, dh), q.dtype)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (ks, vs, kps))
+    out = acc / jnp.maximum(l, 1e-30)[..., None].astype(acc.dtype)
+    # (B, Kv, G, Sq, Dh) -> (B, Sq, Kv, G, Dh)
+    return out.transpose(0, 3, 1, 2, 4)
+
+
+def attention(
+    cfg,
+    p: dict,
+    x: jax.Array,  # (B, Sq, D)
+    q_pos: jax.Array,  # (Sq,)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    kv_x: jax.Array | None = None,  # cross-attention memory (B, Sk, D)
+    kv_pos: jax.Array | None = None,
+    rope: bool = True,
+    chunk: int = 1024,
+) -> jax.Array:
+    """Full-sequence attention (train / prefill / encoder / cross)."""
+    kv_in = x if kv_x is None else kv_x
+    q, k, v = _project_qkv(cfg, p, x, kv_in)
+    if cfg.qk_norm and "q_norm" in p:
+        q = apply_norm(cfg, p["q_norm"], q)
+        k = apply_norm(cfg, p["k_norm"], k)
+    kp = q_pos if kv_pos is None else kv_pos
+    if rope:
+        q = apply_rope(q, q_pos[None, :], cfg.rope_theta, cfg.rope_pct)
+        k = apply_rope(k, kp[None, :], cfg.rope_theta, cfg.rope_pct)
+    b, s = x.shape[:2]
+    if getattr(cfg, "flash_kernel", False):
+        # Pallas flash kernel: scores never leave VMEM (TPU; interpret on
+        # CPU).  Positions must be contiguous-from-0 on this path.
+        from repro.kernels import ops as kops
+
+        out = kops.flash_attention(q, k, v, causal=causal, window=window, cap=cfg.attn_softcap)
+    else:
+        qg = _grouped(q, cfg.n_kv_heads)
+        out = chunked_attention(
+            qg, k, v, q_pos, kp, causal=causal, window=window, cap=cfg.attn_softcap, chunk=chunk
+        )
+        out = out.reshape(b, s, cfg.n_heads, cfg.head_dim)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+
+
+def attention_with_cache(
+    cfg,
+    p: dict,
+    x: jax.Array,  # (B, Sq, D)
+    q_pos: jax.Array,  # (Sq,)
+    cache: dict | None,
+    *,
+    window: int = 0,
+    rope: bool = True,
+    chunk: int = 1024,
+):
+    """Prefill: computes full attention AND returns the populated KV cache."""
+    kv_in = x
+    q, k, v = _project_qkv(cfg, p, x, kv_in)
+    if cfg.qk_norm and "q_norm" in p:
+        q = apply_norm(cfg, p["q_norm"], q)
+        k = apply_norm(cfg, p["k_norm"], k)
+    if rope:
+        q = apply_rope(q, q_pos[None, :], cfg.rope_theta, cfg.rope_pct)
+        k = apply_rope(k, q_pos[None, :], cfg.rope_theta, cfg.rope_pct)
+    qg = _grouped(q, cfg.n_kv_heads)
+    out = chunked_attention(
+        qg, k, v, q_pos, q_pos, causal=True, window=window, cap=cfg.attn_softcap, chunk=chunk
+    )
+    b, s = x.shape[:2]
+    out = out.reshape(b, s, cfg.n_heads, cfg.head_dim)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return y, {"k": k, "v": v}
+
+
+def decode_attention(
+    cfg,
+    p: dict,
+    x: jax.Array,  # (B, 1, D)
+    pos: jax.Array,  # () int32 — current position (cache entries < pos are live)
+    cache: dict,  # {"k","v"}: (B, S, Kv, Dh)
+    *,
+    window: int = 0,
+    rope: bool = True,
+):
+    """Single-token decode against a pre-allocated cache; returns
+    (out (B,1,D), updated cache)."""
+    b, _, d = x.shape
+    s_max = cache["k"].shape[1]
+    q, k_new, v_new = _project_qkv(cfg, p, x, x)
+    if cfg.qk_norm and "q_norm" in p:
+        q = apply_norm(cfg, p["q_norm"], q)
+        k_new = apply_norm(cfg, p["k_norm"], k_new)
+    pos_arr = jnp.full((1,), pos, jnp.int32)
+    if rope:
+        q = apply_rope(q, pos_arr[None, :], cfg.rope_theta, cfg.rope_pct)
+        k_new = apply_rope(k_new, pos_arr[None, :], cfg.rope_theta, cfg.rope_pct)
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), pos, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), pos, axis=1)
+
+    qg = _grouped(q, cfg.n_kv_heads)  # (B, 1, Kv, G, Dh)
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", (qg * scale).astype(qg.dtype), k)
+    s = s.astype(jnp.float32)
+    if cfg.attn_softcap:
+        s = softcap(s, cfg.attn_softcap)
+    kpos = jnp.arange(s_max, dtype=jnp.int32)
+    mask = kpos[None, :] <= pos
+    if window:
+        mask &= pos - kpos[None, :] < window
+    s = jnp.where(mask[None, None, None], s, NEG)
+    pr = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bhgqd", pr.astype(v.dtype), v)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, 1, cfg.n_heads, cfg.head_dim)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return y, {"k": k, "v": v}

@@ -1,0 +1,152 @@
+"""Shared layer primitives: norms, RoPE, activations, param-spec helpers.
+
+Parameters are described by ``ShapeAxes`` specs (shape + dtype + logical
+axes) so the same definition serves (a) real initialisation for smoke
+tests/examples and (b) ShapeDtypeStruct stand-ins for the multi-pod
+dry-run.  Weights are stored fp32 (master copy); forward casts to the
+config compute dtype.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import ShapeAxes
+
+
+def spec(shape, axes, dtype="float32") -> ShapeAxes:
+    return ShapeAxes(shape=tuple(shape), dtype=dtype, axes=tuple(axes))
+
+
+def init_from_specs(key: jax.Array, specs, scale: float = 0.02):
+    """Materialise a param pytree from ShapeAxes specs (normal init; norms
+    get ones/zeros by convention of the trailing axis name)."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=lambda x: isinstance(x, ShapeAxes))
+    keys = jax.random.split(key, max(len(leaves), 1))
+    out = []
+    for k, s in zip(keys, leaves):
+        if s.axes and s.axes[-1] == "norm_scale":
+            out.append(jnp.ones(s.shape, s.dtype))
+        elif s.axes and s.axes[-1] == "norm_bias":
+            out.append(jnp.zeros(s.shape, s.dtype))
+        else:
+            fan_in = s.shape[-2] if len(s.shape) >= 2 else s.shape[-1]
+            std = min(scale, 1.0 / math.sqrt(max(fan_in, 1)))
+            out.append(jax.random.normal(k, s.shape, jnp.float32).astype(s.dtype) * std)
+    return jax.tree.unflatten(treedef, out)
+
+
+def cast(x, dtype: str):
+    return x.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(dt)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    out = (x - mu) * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    return out.astype(dt)
+
+
+def norm_spec(cfg, d: int | None = None) -> dict:
+    d = d or cfg.d_model
+    if cfg.norm == "layernorm":
+        return {
+            "scale": spec((d,), ("norm_scale",)),
+            "bias": spec((d,), ("norm_bias",)),
+        }
+    return {"scale": spec((d,), ("norm_scale",))}
+
+
+def apply_norm(cfg, p: dict, x):
+    if cfg.norm == "layernorm":
+        return layer_norm(x, p["scale"], p["bias"])
+    return rms_norm(x, p["scale"])
+
+
+# ---------------------------------------------------------------------------
+# RoPE (with partial-rotary support for stablelm)
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, pct: float, theta: float):
+    rot = int(head_dim * pct) // 2 * 2
+    inv = 1.0 / (theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+    return inv, rot
+
+
+def apply_rope(x, positions, theta: float, pct: float = 1.0):
+    """x: (..., S, H, Dh); positions: (..., S) int32."""
+    dh = x.shape[-1]
+    inv, rot = rope_frequencies(dh, pct, theta)
+    if rot == 0:
+        return x
+    ang = positions[..., :, None].astype(jnp.float32) * inv  # (..., S, rot/2)
+    sin = jnp.sin(ang)[..., :, None, :]  # (..., S, 1, rot/2)
+    cos = jnp.cos(ang)[..., :, None, :]
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = xr[..., : rot // 2], xr[..., rot // 2 :]
+    out1 = x1 * cos - x2 * sin
+    out2 = x2 * cos + x1 * sin
+    return jnp.concatenate([out1.astype(x.dtype), out2.astype(x.dtype), xp], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Activations / FFN
+# ---------------------------------------------------------------------------
+
+
+def softcap(x, cap: float):
+    if not cap:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+GATED_ACTS = ("swiglu", "geglu")
+
+
+def ffn_spec(cfg, d_ff: int | None = None) -> dict:
+    d_ff = d_ff or cfg.d_ff
+    d = cfg.d_model
+    if cfg.act in GATED_ACTS:
+        return {
+            "w_gate": spec((d, d_ff), ("embed", "mlp")),
+            "w_up": spec((d, d_ff), ("embed", "mlp")),
+            "w_down": spec((d_ff, d), ("mlp", "embed")),
+        }
+    return {
+        "w_up": spec((d, d_ff), ("embed", "mlp")),
+        "w_down": spec((d_ff, d), ("mlp", "embed")),
+    }
+
+
+def apply_ffn(cfg, p: dict, x):
+    from repro.sharding import constrain
+
+    dt = x.dtype
+    if cfg.act in GATED_ACTS:
+        g = x @ p["w_gate"].astype(dt)
+        u = x @ p["w_up"].astype(dt)
+        act = jax.nn.silu if cfg.act == "swiglu" else jax.nn.gelu
+        h = act(g) * u
+    else:
+        h = jax.nn.gelu(x @ p["w_up"].astype(dt))
+    h = constrain(h, ("batch", "seq", "mlp"))
+    return h @ p["w_down"].astype(dt)

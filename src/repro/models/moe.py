@@ -1,0 +1,131 @@
+"""Mixture-of-Experts FFN: top-k routing with capacity-bounded, sort-free
+dispatch (per-expert top-C token selection) + optional always-on shared
+experts (deepseek-style fine-grained MoE).
+
+Dispatch strategy (TPU-friendly, no ragged ops):
+  router probs (T, E) → top-k per token → per-expert token weights (E, T)
+  → per-expert top-C token gather into (E, C, D) buffers → batched expert
+  einsum → weighted scatter-add back to (T, D).
+
+The (E, C, D) buffer is the unit of expert parallelism: when E divides the
+`model` mesh axis the buffer and expert weights shard over experts (true
+EP — deepseek 64/16); otherwise expert weights shard over their FFN dim
+(TP-within-expert — mixtral 8 on 16).  Both are expressed purely through
+the logical-axis rules; the compute code is identical.
+
+Tokens beyond an expert's capacity are dropped (standard capacity-factor
+semantics); the router aux/z losses are returned for the train loss.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import spec
+from repro.sharding import constrain
+
+
+def moe_spec(cfg) -> dict:
+    m = cfg.moe
+    d = cfg.d_model
+    p = {
+        "router": spec((d, m.n_experts), ("embed", "experts")),
+        "w_gate": spec((m.n_experts, d, m.expert_d_ff), ("experts", "embed", "expert_mlp")),
+        "w_up": spec((m.n_experts, d, m.expert_d_ff), ("experts", "embed", "expert_mlp")),
+        "w_down": spec((m.n_experts, m.expert_d_ff, d), ("experts", "expert_mlp", "embed")),
+    }
+    if m.n_shared_experts:
+        dsh = m.expert_d_ff * m.n_shared_experts
+        p["shared"] = {
+            "w_gate": spec((d, dsh), ("embed", "mlp")),
+            "w_up": spec((d, dsh), ("embed", "mlp")),
+            "w_down": spec((dsh, d), ("mlp", "embed")),
+        }
+    return p
+
+
+def _capacity(t: int, m) -> int:
+    c = int(t * m.top_k * m.capacity_factor / m.n_experts)
+    return min(t, max(8, (c + 7) // 8 * 8))
+
+
+def apply_moe(cfg, p: dict, x: jax.Array) -> tuple[jax.Array, dict]:
+    """x: (B, S, D) -> (B, S, D), aux metrics {aux_loss, z_loss}."""
+    m = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    xt = x.reshape(t, d)
+    dt = x.dtype
+
+    logits = (xt.astype(jnp.float32)) @ p["router"].astype(jnp.float32)  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, m.top_k)  # (T, k)
+    top_p = top_p / jnp.maximum(jnp.sum(top_p, axis=-1, keepdims=True), 1e-9)
+
+    # per-expert token weights (E, T)
+    onehot = jax.nn.one_hot(top_i, m.n_experts, dtype=jnp.float32)  # (T, k, E)
+    w_te = jnp.einsum("tke,tk->te", onehot, top_p)  # (T, E)
+    w_et = w_te.T  # (E, T)
+
+    # aux losses (Switch-style load balancing + router z-loss)
+    frac_tokens = jnp.mean(jnp.sum(onehot, axis=1), axis=0)  # (E,)
+    frac_probs = jnp.mean(probs, axis=0)
+    aux = m.n_experts * jnp.sum(frac_tokens * frac_probs) * m.aux_loss
+    z = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2) * m.router_z_loss
+
+    groups = getattr(cfg, "moe_dispatch_groups", 0)
+    if groups and groups > 1 and t % groups == 0:
+        # LOCAL dispatch (§Perf): top-C within each token group; groups are
+        # aligned with the `data` shards so the gather/scatter is
+        # device-local and cross-device movement is only the EP all-to-all.
+        tl = t // groups
+        cap = _capacity(tl, m)
+        w_egt = w_et.reshape(m.n_experts, groups, tl)
+        sel_w, sel_idx = jax.lax.top_k(w_egt, cap)  # (E, G, Cl)
+        sel_idx = constrain(sel_idx, ("experts", "expert_group", None))
+        xt_g = xt.reshape(groups, tl, d)
+
+        take = jax.vmap(lambda xs, ix: jnp.take(xs, ix, axis=0), in_axes=(0, 1), out_axes=1)
+        xg = take(xt_g, sel_idx)  # (E, G, Cl, D)
+        xg = constrain(xg, ("experts", "expert_group", None, None))
+
+        h = jax.nn.silu(jnp.einsum("egcd,edf->egcf", xg, p["w_gate"].astype(dt))) * jnp.einsum(
+            "egcd,edf->egcf", xg, p["w_up"].astype(dt)
+        )
+        ye = jnp.einsum("egcf,efd->egcd", h, p["w_down"].astype(dt))
+        ye = constrain(ye, ("experts", "expert_group", None, None))
+        ye = ye * sel_w[..., None].astype(dt)
+
+        def scat(ix, val):  # (E, Cl), (E, Cl, D) -> (Tl, D)
+            return jnp.zeros((tl, d), dt).at[ix.reshape(-1)].add(val.reshape(-1, d))
+
+        out_g = jax.vmap(scat, in_axes=(1, 1))(sel_idx, ye)  # (G, Tl, D)
+        out = constrain(out_g.reshape(t, d), ("flat_tokens", None))
+    else:
+        # GLOBAL dispatch (baseline): per-expert top-C over all tokens.
+        # The (E, C, D) buffer is the EP unit: experts shard over
+        # `model`/`expert` (when divisible), capacity over `data`.
+        cap = _capacity(t, m)
+        sel_w, sel_idx = jax.lax.top_k(w_et, cap)  # (E, C)
+        sel_idx = constrain(sel_idx, ("experts", "expert_cap"))
+        xg = jnp.take(xt, sel_idx, axis=0)  # (E, C, D)
+        xg = constrain(xg, ("experts", "expert_cap", None))
+
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xg, p["w_gate"].astype(dt))) * jnp.einsum(
+            "ecd,edf->ecf", xg, p["w_up"].astype(dt)
+        )
+        ye = jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(dt))  # (E, C, D)
+        ye = constrain(ye, ("experts", "expert_cap", None))
+        ye = ye * sel_w[..., None].astype(dt)
+
+        out = jnp.zeros((t, d), dt)
+        out = out.at[sel_idx.reshape(-1)].add(ye.reshape(-1, d))
+        out = constrain(out, ("flat_tokens", None))
+
+    if m.n_shared_experts:
+        sh = p["shared"]
+        hs = jax.nn.silu(xt @ sh["w_gate"].astype(dt)) * (xt @ sh["w_up"].astype(dt))
+        out = out + hs @ sh["w_down"].astype(dt)
+
+    return out.reshape(b, s, d), {"aux_loss": aux, "z_loss": z}

@@ -1,0 +1,540 @@
+"""Model assembly: heterogeneous layer stacks under `lax.scan`.
+
+Layers are grouped as  [prefix (static)] + [G groups x P pattern slots
+(scanned)] + [tail (static)].  Per-slot parameters are stacked on a
+leading G axis so the HLO contains ONE trace of each distinct block kind
+regardless of depth — essential for CPU-side compile times of 26..56-layer
+configs and for keeping the dry-run HLO small.
+
+Covers: dense/GQA attention (full / sliding-window / alternating),
+logit softcaps, pre+post norms, MoE FFNs, Mamba-2 and xLSTM mixers,
+zamba2-style weight-shared attention blocks interleaved between scan
+groups, and the seamless-style encoder-decoder with cross-attention.
+
+Three entry points per architecture:
+  forward_train  — full-sequence logits (+ aux losses)
+  prefill        — full-sequence forward that also builds the decode cache
+  decode_step    — single-token step against the cache
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.config import ModelConfig
+from repro.models.layers import (
+    apply_ffn,
+    apply_norm,
+    ffn_spec,
+    init_from_specs,
+    norm_spec,
+    softcap,
+    spec,
+)
+from repro.sharding import constrain
+
+# ---------------------------------------------------------------------------
+# Structure helpers
+# ---------------------------------------------------------------------------
+
+
+def _layout(cfg: ModelConfig):
+    """(prefix kinds, pattern, G, tail kinds)."""
+    blocks = cfg.blocks()
+    n_prefix = len(cfg.prefix_pattern)
+    body = blocks[n_prefix:]
+    p = cfg.pattern_period
+    g = len(body) // p
+    tail = body[g * p :]
+    return blocks[:n_prefix], cfg.layer_pattern, g, tail
+
+
+def _is_attn(kind: str) -> bool:
+    return kind in ("full", "swa", "full_dense", "swa_dense")
+
+
+def _window(cfg, kind: str) -> int:
+    return cfg.window if kind.startswith("swa") else 0
+
+
+# ---------------------------------------------------------------------------
+# Param specs
+# ---------------------------------------------------------------------------
+
+
+def block_spec(cfg: ModelConfig, kind: str, cross: bool = False) -> dict:
+    if _is_attn(kind):
+        p: dict[str, Any] = {"ln1": norm_spec(cfg), "attn": attn.attn_spec(cfg)}
+        if cfg.post_norm:
+            p["ln1_post"] = norm_spec(cfg)
+        if cross:
+            p["ln_cross"] = norm_spec(cfg)
+            p["cross"] = attn.attn_spec(cfg, cross=True)
+        p["ln2"] = norm_spec(cfg)
+        if cfg.moe is not None and not kind.endswith("_dense"):
+            p["moe"] = moe_mod.moe_spec(cfg)
+        elif cfg.d_ff:
+            p["ffn"] = ffn_spec(cfg)
+        if cfg.post_norm:
+            p["ln2_post"] = norm_spec(cfg)
+        return p
+    if kind == "mamba2":
+        return {"ln1": norm_spec(cfg), "mixer": ssm_mod.mamba2_spec(cfg)}
+    if kind == "mlstm":
+        return {"ln1": norm_spec(cfg), "mixer": xlstm_mod.mlstm_spec(cfg)}
+    if kind == "slstm":
+        return {"ln1": norm_spec(cfg), "mixer": xlstm_mod.slstm_spec(cfg)}
+    raise ValueError(f"unknown block kind {kind!r}")
+
+
+def _stack_specs(s, g: int):
+    """Prepend a stacked 'layers' axis of size g to every ShapeAxes leaf."""
+    return jax.tree.map(
+        lambda leaf: spec((g, *leaf.shape), ("layers", *leaf.axes), leaf.dtype),
+        s,
+        is_leaf=lambda x: hasattr(x, "axes") and hasattr(x, "shape"),
+    )
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    prefix, pattern, g, tail = _layout(cfg)
+    cross = cfg.is_encdec
+    p: dict[str, Any] = {
+        "embed": spec((cfg.vocab_padded, cfg.d_model), ("vocab", "embed")),
+        "final_norm": norm_spec(cfg),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = spec((cfg.d_model, cfg.vocab_padded), ("embed", "vocab"))
+    if prefix:
+        p["prefix"] = [block_spec(cfg, k, cross) for k in prefix]
+    if g:
+        p["groups"] = {
+            str(slot): _stack_specs(block_spec(cfg, pattern[slot], cross), g)
+            for slot in range(len(pattern))
+        }
+    if tail:
+        p["tail"] = [block_spec(cfg, k, cross) for k in tail]
+    if cfg.shared_attn_every:
+        shared_cfg = cfg
+        p["shared_attn"] = {
+            "ln1": norm_spec(cfg),
+            "attn": attn.attn_spec(cfg),
+            "ln2": norm_spec(cfg),
+            "ffn": ffn_spec(cfg),
+        }
+    if cfg.is_encdec:
+        p["encoder"] = {
+            "blocks": _stack_specs(
+                {
+                    "ln1": norm_spec(cfg),
+                    "attn": attn.attn_spec(cfg),
+                    "ln2": norm_spec(cfg),
+                    "ffn": ffn_spec(cfg),
+                },
+                cfg.n_enc_layers,
+            ),
+            "final_norm": norm_spec(cfg),
+        }
+    return p
+
+
+def init_params(cfg: ModelConfig, key: jax.Array):
+    return init_from_specs(key, param_specs(cfg))
+
+
+def param_count(cfg: ModelConfig) -> int:
+    leaves = jax.tree.leaves(
+        param_specs(cfg), is_leaf=lambda x: hasattr(x, "axes") and hasattr(x, "shape")
+    )
+    return sum(math.prod(l.shape) for l in leaves)
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """Active params per token (MoE: shared + top_k of routed)."""
+    total = param_count(cfg)
+    if cfg.moe is None:
+        return total
+    m = cfg.moe
+    per_expert = 3 * cfg.d_model * m.expert_d_ff
+    prefix, pattern, g, tail = _layout(cfg)
+    n_moe = sum(
+        1 for k in (list(prefix) + list(pattern) * g + list(tail)) if _is_attn(k) and not k.endswith("_dense")
+    )
+    inactive = n_moe * (m.n_experts - m.top_k) * per_expert
+    return total - inactive
+
+
+# ---------------------------------------------------------------------------
+# Cache specs
+# ---------------------------------------------------------------------------
+
+
+def _attn_cache_spec(cfg, batch: int, seq: int, cross_len: int = 0) -> dict:
+    c = {
+        "k": spec((batch, seq, cfg.n_kv_heads, cfg.head_dim), ("batch", "kv_seq", "kv_heads", None), cfg.dtype),
+        "v": spec((batch, seq, cfg.n_kv_heads, cfg.head_dim), ("batch", "kv_seq", "kv_heads", None), cfg.dtype),
+    }
+    if cross_len:
+        c["ck"] = spec((batch, cross_len, cfg.n_kv_heads, cfg.head_dim), ("batch", None, "kv_heads", None), cfg.dtype)
+        c["cv"] = spec((batch, cross_len, cfg.n_kv_heads, cfg.head_dim), ("batch", None, "kv_heads", None), cfg.dtype)
+    return c
+
+
+def _kind_cache_spec(cfg, kind: str, batch: int, seq: int, cross_len: int):
+    if _is_attn(kind):
+        return _attn_cache_spec(cfg, batch, seq, cross_len)
+    if kind == "mamba2":
+        return ssm_mod.mamba2_cache_spec(cfg, batch)
+    if kind == "mlstm":
+        return xlstm_mod.mlstm_cache_spec(cfg, batch)
+    if kind == "slstm":
+        return xlstm_mod.slstm_cache_spec(cfg, batch)
+    raise ValueError(kind)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, seq: int) -> dict:
+    """ShapeAxes tree describing the decode cache for (batch, max_seq)."""
+    prefix, pattern, g, tail = _layout(cfg)
+    cross = cfg.frontend_len if cfg.is_encdec else 0
+    c: dict[str, Any] = {}
+    if prefix:
+        c["prefix"] = [_kind_cache_spec(cfg, k, batch, seq, cross) for k in prefix]
+    if g:
+        c["groups"] = {
+            str(slot): _stack_specs(_kind_cache_spec(cfg, pattern[slot], batch, seq, cross), g)
+            for slot in range(len(pattern))
+        }
+    if tail:
+        c["tail"] = [_kind_cache_spec(cfg, k, batch, seq, cross) for k in tail]
+    if cfg.shared_attn_every and g:
+        c["shared"] = _stack_specs(_attn_cache_spec(cfg, batch, seq), g)
+    return c
+
+
+# ---------------------------------------------------------------------------
+# Block application
+# ---------------------------------------------------------------------------
+
+
+def _apply_ffn_part(cfg, p, x, aux):
+    h = apply_norm(cfg, p["ln2"], x)
+    if "moe" in p:
+        y, a = moe_mod.apply_moe(cfg, p["moe"], h)
+        aux = {k: aux[k] + a[k] for k in aux}
+    elif "ffn" in p:
+        y = apply_ffn(cfg, p["ffn"], h)
+    else:
+        return x, aux
+    if cfg.post_norm:
+        y = apply_norm(cfg, p["ln2_post"], y)
+    return x + y, aux
+
+
+def apply_block(
+    cfg: ModelConfig,
+    kind: str,
+    p: dict,
+    x: jax.Array,
+    q_pos: jax.Array,
+    *,
+    mode: str,  # 'train' | 'prefill' | 'decode'
+    cache: dict | None = None,
+    pos=None,  # decode position scalar
+    memory: jax.Array | None = None,  # encoder output for cross-attn
+    aux: dict,
+    chunk: int = 1024,
+):
+    """Returns (x, new_cache, aux)."""
+    x = constrain(x, ("batch", "seq", None))
+    new_cache = cache
+    if _is_attn(kind):
+        h = apply_norm(cfg, p["ln1"], x)
+        window = _window(cfg, kind)
+        if mode == "train":
+            y = attn.attention(cfg, p["attn"], h, q_pos, causal=True, window=window, chunk=chunk)
+            kv = None
+        elif mode == "prefill":
+            y, kv = attn.attention_with_cache(cfg, p["attn"], h, q_pos, None, window=window, chunk=chunk)
+            # pad K/V out to the cache length
+            s_max = cache["k"].shape[1]
+            pad = s_max - kv["k"].shape[1]
+            kv = {
+                "k": jnp.pad(kv["k"], ((0, 0), (0, pad), (0, 0), (0, 0))).astype(cache["k"].dtype),
+                "v": jnp.pad(kv["v"], ((0, 0), (0, pad), (0, 0), (0, 0))).astype(cache["v"].dtype),
+            }
+        else:  # decode
+            y, kv = attn.decode_attention(cfg, p["attn"], h, pos, {"k": cache["k"], "v": cache["v"]}, window=window)
+        if cfg.post_norm:
+            y = apply_norm(cfg, p["ln1_post"], y)
+        x = x + y
+
+        if "cross" in p:
+            hc = apply_norm(cfg, p["ln_cross"], x)
+            if mode == "decode":
+                y = _cross_decode(cfg, p["cross"], hc, cache["ck"], cache["cv"])
+                kv = {**kv, "ck": cache["ck"], "cv": cache["cv"]}
+            else:
+                kp = jnp.arange(memory.shape[1], dtype=jnp.int32)
+                y = attn.attention(
+                    cfg, p["cross"], hc, q_pos, causal=False, kv_x=memory, kv_pos=kp, rope=False, chunk=chunk
+                )
+                if mode == "prefill":
+                    dt = cache["ck"].dtype
+                    kv = {
+                        **kv,
+                        "ck": jnp.einsum("bsd,dhk->bshk", memory, p["cross"]["wk"].astype(x.dtype)).astype(dt),
+                        "cv": jnp.einsum("bsd,dhk->bshk", memory, p["cross"]["wv"].astype(x.dtype)).astype(dt),
+                    }
+            x = x + y
+
+        x, aux = _apply_ffn_part(cfg, p, x, aux)
+        if mode in ("prefill", "decode"):
+            new_cache = kv
+        return x, new_cache, aux
+
+    # --- recurrent mixers ---
+    h = apply_norm(cfg, p["ln1"], x)
+    if kind == "mamba2":
+        if mode == "decode":
+            y, new_cache = ssm_mod.mamba2_decode(cfg, p["mixer"], h, cache)
+        else:
+            y, new_cache = ssm_mod.apply_mamba2(cfg, p["mixer"], h)
+    elif kind == "mlstm":
+        if mode == "decode":
+            y, new_cache = xlstm_mod.mlstm_decode(cfg, p["mixer"], h, cache)
+        else:
+            y, new_cache = xlstm_mod.apply_mlstm(cfg, p["mixer"], h)
+    elif kind == "slstm":
+        if mode == "decode":
+            y, new_cache = xlstm_mod.slstm_decode(cfg, p["mixer"], h, cache)
+        else:
+            y, new_cache = xlstm_mod.apply_slstm(cfg, p["mixer"], h)
+    else:
+        raise ValueError(kind)
+    if mode == "train":
+        new_cache = None
+    return x + y, new_cache, aux
+
+
+def _cross_decode(cfg, p, x, ck, cv):
+    """Single-token cross-attention against precomputed encoder K/V."""
+    b = x.shape[0]
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    qg = attn._grouped(q, cfg.n_kv_heads)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg / math.sqrt(cfg.head_dim), ck.astype(dt))
+    pr = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bhgqd", pr.astype(dt), cv.astype(dt))
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, 1, cfg.n_heads, cfg.head_dim)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt))
+
+
+# ---------------------------------------------------------------------------
+# Stacks
+# ---------------------------------------------------------------------------
+
+
+ZERO_AUX = lambda: {"aux_loss": jnp.float32(0.0), "z_loss": jnp.float32(0.0)}
+
+
+def _shared_attn_block(cfg, p, x, q_pos, mode, cache, pos, aux, chunk):
+    """zamba2-style weight-shared attention+FFN block (applied per group)."""
+    h = apply_norm(cfg, p["ln1"], x)
+    if mode == "train":
+        y = attn.attention(cfg, p["attn"], h, q_pos, causal=True, chunk=chunk)
+        kv = None
+    elif mode == "prefill":
+        y, kv = attn.attention_with_cache(cfg, p["attn"], h, q_pos, None, chunk=chunk)
+        s_max = cache["k"].shape[1]
+        pad = s_max - kv["k"].shape[1]
+        kv = {
+            "k": jnp.pad(kv["k"], ((0, 0), (0, pad), (0, 0), (0, 0))).astype(cache["k"].dtype),
+            "v": jnp.pad(kv["v"], ((0, 0), (0, pad), (0, 0), (0, 0))).astype(cache["v"].dtype),
+        }
+    else:
+        y, kv = attn.decode_attention(cfg, p["attn"], h, pos, cache)
+    x = x + y
+    h2 = apply_norm(cfg, p["ln2"], x)
+    x = x + apply_ffn(cfg, p["ffn"], h2)
+    return x, kv, aux
+
+
+def _run_stack(
+    cfg: ModelConfig,
+    params: dict,
+    x: jax.Array,
+    q_pos: jax.Array,
+    *,
+    mode: str,
+    cache: dict | None,
+    pos=None,
+    memory=None,
+    chunk: int = 1024,
+):
+    """Apply prefix + scanned groups + tail.  Returns (x, new_cache, aux)."""
+    prefix, pattern, g, tail = _layout(cfg)
+    aux = ZERO_AUX()
+    new_cache: dict[str, Any] = {}
+
+    if prefix:
+        pc = []
+        for i, kind in enumerate(prefix):
+            c_i = cache["prefix"][i] if cache else None
+            x, nc, aux = apply_block(
+                cfg, kind, params["prefix"][i], x, q_pos, mode=mode, cache=c_i, pos=pos, memory=memory, aux=aux, chunk=chunk
+            )
+            pc.append(nc)
+        if mode != "train":
+            new_cache["prefix"] = pc
+
+    if g:
+        p_slots = params["groups"]
+        c_slots = cache["groups"] if cache else None
+        shared_p = params.get("shared_attn")
+        c_shared = cache.get("shared") if cache else None
+
+        def group_body(carry, inp):
+            x, aux = carry
+            p_slice, c_slice, sh_c = inp
+            out_c: dict[str, Any] = {}
+            sh_out = None
+            if shared_p is not None:
+                x, sh_out, aux = _shared_attn_block(cfg, shared_p, x, q_pos, mode, sh_c, pos, aux, chunk)
+            for slot in range(len(pattern)):
+                kind = pattern[slot]
+                cc = c_slice[str(slot)] if c_slice is not None else None
+                x, nc, aux = apply_block(
+                    cfg, kind, p_slice[str(slot)], x, q_pos, mode=mode, cache=cc, pos=pos, memory=memory, aux=aux, chunk=chunk
+                )
+                out_c[str(slot)] = nc
+            return (x, aux), (out_c if mode != "train" else None, sh_out if mode != "train" else None)
+
+        body = group_body
+        if mode == "train" and cfg.remat != "none":
+            policy = None if cfg.remat == "full" else jax.checkpoint_policies.checkpoint_dots
+            body = jax.checkpoint(group_body, policy=policy)
+
+        xs = (p_slots, c_slots, c_shared)
+        (x, aux), (gc, sc) = jax.lax.scan(body, (x, aux), xs)
+        if mode != "train":
+            new_cache["groups"] = gc
+            if sc is not None and shared_p is not None:
+                new_cache["shared"] = sc
+
+    if tail:
+        tc = []
+        for i, kind in enumerate(tail):
+            c_i = cache["tail"][i] if cache else None
+            x, nc, aux = apply_block(
+                cfg, kind, params["tail"][i], x, q_pos, mode=mode, cache=c_i, pos=pos, memory=memory, aux=aux, chunk=chunk
+            )
+            tc.append(nc)
+        if mode != "train":
+            new_cache["tail"] = tc
+
+    return x, (new_cache if mode != "train" else None), aux
+
+
+# ---------------------------------------------------------------------------
+# Embedding / logits / encoder
+# ---------------------------------------------------------------------------
+
+
+def embed_tokens(cfg, params, tokens, frontend_embeds=None):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+    if cfg.embed_scale:
+        x = x * math.sqrt(cfg.d_model)
+    if frontend_embeds is not None and not cfg.is_encdec:
+        x = jnp.concatenate([frontend_embeds.astype(x.dtype), x], axis=1)
+    return constrain(x, ("batch", "seq", None))
+
+
+def logits_from(cfg, params, x):
+    h = apply_norm(cfg, params["final_norm"], x)
+    if cfg.tie_embeddings:
+        lg = jnp.einsum("bsd,vd->bsv", h, params["embed"].astype(h.dtype))
+    else:
+        lg = jnp.einsum("bsd,dv->bsv", h, params["lm_head"].astype(h.dtype))
+    lg = lg.astype(jnp.float32)
+    if cfg.final_softcap:
+        lg = softcap(lg, cfg.final_softcap)
+    if cfg.vocab_padded > cfg.vocab:
+        # mask padded vocabulary ids so they never win sampling / CE mass
+        ids = jnp.arange(cfg.vocab_padded)
+        lg = jnp.where(ids < cfg.vocab, lg, -1e30)
+    return lg
+
+
+def encode(cfg, params, frames: jax.Array, chunk: int = 1024):
+    """Encoder stack over stub frame embeddings (B, Senc, D)."""
+    enc = params["encoder"]
+    x = frames.astype(cfg.dtype)
+    q_pos = jnp.arange(x.shape[1], dtype=jnp.int32)
+
+    def body(x, p):
+        h = apply_norm(cfg, p["ln1"], x)
+        y = attn.attention(cfg, p["attn"], h, q_pos, causal=False, chunk=chunk)
+        x = x + y
+        h2 = apply_norm(cfg, p["ln2"], x)
+        return x + apply_ffn(cfg, p["ffn"], h2), None
+
+    x, _ = jax.lax.scan(body, x, enc["blocks"])
+    return apply_norm(cfg, enc["final_norm"], x)
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+
+
+def forward_train(
+    cfg: ModelConfig, params, tokens, frontend_embeds=None, chunk: int = 1024, return_hidden: bool = False
+):
+    """Returns (logits over TOKEN positions (B, S_tok, V), aux); with
+    return_hidden=True returns the pre-logits hidden states instead of
+    logits (the chunked-CE train loss computes logits chunk-wise)."""
+    memory = None
+    if cfg.is_encdec:
+        memory = encode(cfg, params, frontend_embeds, chunk=chunk)
+        x = embed_tokens(cfg, params, tokens)
+    else:
+        x = embed_tokens(cfg, params, tokens, frontend_embeds)
+    q_pos = jnp.arange(x.shape[1], dtype=jnp.int32)
+    x, _, aux = _run_stack(cfg, params, x, q_pos, mode="train", cache=None, memory=memory, chunk=chunk)
+    if frontend_embeds is not None and not cfg.is_encdec:
+        x = x[:, frontend_embeds.shape[1] :, :]
+    if return_hidden:
+        return x, aux
+    return logits_from(cfg, params, x), aux
+
+
+def prefill(cfg: ModelConfig, params, tokens, cache, frontend_embeds=None, chunk: int = 1024):
+    """Full forward building the decode cache.  Returns (logits, cache)."""
+    memory = None
+    if cfg.is_encdec:
+        memory = encode(cfg, params, frontend_embeds, chunk=chunk)
+        x = embed_tokens(cfg, params, tokens)
+    else:
+        x = embed_tokens(cfg, params, tokens, frontend_embeds)
+    q_pos = jnp.arange(x.shape[1], dtype=jnp.int32)
+    x, new_cache, _ = _run_stack(cfg, params, x, q_pos, mode="prefill", cache=cache, memory=memory, chunk=chunk)
+    if frontend_embeds is not None and not cfg.is_encdec:
+        x = x[:, frontend_embeds.shape[1] :, :]
+    return logits_from(cfg, params, x[:, -1:, :]), new_cache
+
+
+def decode_step(cfg: ModelConfig, params, token, pos, cache):
+    """token (B, 1) int32; pos () int32; returns (logits (B,1,V), cache')."""
+    x = embed_tokens(cfg, params, token)
+    q_pos = jnp.full((1,), pos, jnp.int32)
+    x, new_cache, _ = _run_stack(cfg, params, x, q_pos, mode="decode", cache=cache, pos=pos)
+    return logits_from(cfg, params, x), new_cache

@@ -1,0 +1,73 @@
+"""GridLocal outer optimizer — the paper's single-aggregation pattern
+applied to distributed training.
+
+Each pod ("grid site") runs H inner AdamW steps with NO cross-pod
+communication; every H steps the pods' parameter deltas are aggregated by
+the paper's sufficient-statistics merge (weighted by examples processed —
+uniform here, so a pmean over the `pod` axis) and an outer Nesterov-SGD
+step is applied (DiLoCo-style).  Cross-pod (DCN) traffic drops by ~H×.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OuterConfig(NamedTuple):
+    h_steps: int = 16  # inner steps between outer syncs
+    outer_lr: float = 0.7
+    outer_momentum: float = 0.9
+    # cross-pod delta compression for the merge ('none' | 'int8'):
+    # per-leaf symmetric quantisation of (params - anchor) so the ONLY
+    # cross-pod payload is int8 + one scale scalar per leaf (4x fewer
+    # wire bytes than f32, 2x fewer than bf16) — gradient compression in
+    # the paper's "ship sufficient statistics, not data" spirit.
+    compress: str = "none"
+
+
+def quantize_delta(delta, scale=None):
+    """Symmetric per-leaf int8 quantisation.  Returns (q, scale)."""
+    if scale is None:
+        scale = jnp.maximum(jnp.max(jnp.abs(delta)), 1e-12)
+    q = jnp.clip(jnp.round(delta / scale * 127.0), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_delta(q, scale):
+    return q.astype(jnp.float32) * (scale / 127.0)
+
+
+def outer_init(params):
+    return {
+        "anchor": jax.tree.map(lambda p: p.astype(jnp.float32), params),
+        "momentum": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+    }
+
+
+def outer_update(cfg: OuterConfig, outer_state, merged_params):
+    """Nesterov outer step on the (already pod-averaged) parameters.
+
+    delta = merged - anchor;  m = mu*m + delta
+    anchor' = anchor + lr * (delta + mu*m)
+    Returns (new_inner_params, new_outer_state) — inner params are reset to
+    the new anchor (all pods identical again).
+    """
+    mu, lr = cfg.outer_momentum, cfg.outer_lr
+
+    def upd(anchor, m, merged):
+        delta = merged.astype(jnp.float32) - anchor
+        m = mu * m + delta
+        new_anchor = anchor + lr * (delta + mu * m)
+        return new_anchor, m
+
+    flat_a, tdef = jax.tree.flatten(outer_state["anchor"])
+    flat_m = tdef.flatten_up_to(outer_state["momentum"])
+    flat_p = tdef.flatten_up_to(merged_params)
+    out = [upd(a, m, p) for a, m, p in zip(flat_a, flat_m, flat_p)]
+    anchor = jax.tree.unflatten(tdef, [o[0] for o in out])
+    mom = jax.tree.unflatten(tdef, [o[1] for o in out])
+    new_params = jax.tree.map(lambda a, p: a.astype(p.dtype), anchor, merged_params)
+    return new_params, {"anchor": anchor, "momentum": mom}

@@ -1,0 +1,118 @@
+"""Roofline term derivation from compiled dry-run artifacts.
+
+compute   = HLO_FLOPs        / (chips * peak_FLOP/s)
+memory    = HLO_bytes        / (chips * HBM_bw)
+collective= collective_bytes / (chips * link_bw)
+
+FLOPs/bytes come from ``compiled.cost_analysis()``; collective bytes are
+NOT there — we parse the optimized (post-SPMD) HLO text and sum operand
+sizes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute (async -start variants counted once, -done skipped).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1,
+    "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+COLLECTIVES = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+
+def shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_type: dict = field(default_factory=dict)
+    count_by_type: dict = field(default_factory=dict)
+    total_bytes: int = 0
+
+    def as_dict(self):
+        return {
+            "bytes_by_type": self.bytes_by_type,
+            "count_by_type": self.count_by_type,
+            "total_bytes": self.total_bytes,
+        }
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    """Sum RESULT-side operand sizes of every collective op instance."""
+    st = CollectiveStats()
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if "=" not in s:
+            continue
+        lhs_rhs = s.split("=", 1)
+        rhs = lhs_rhs[1].lstrip()
+        m = re.match(r"(?:\(|)([a-z0-9\[\],{}:TSE# ]*?)\)? ?([a-z\-]+)\(", rhs)
+        # find which collective op (if any) this instruction is
+        op = None
+        for c in COLLECTIVES:
+            if re.search(rf"\b{c}(-start)?\(", rhs):
+                op = c
+                break
+            if re.search(rf"\b{c}-done\(", rhs):
+                op = "skip"
+                break
+        if op is None or op == "skip":
+            continue
+        # result shapes are between '=' and the op name
+        head = rhs.split(op)[0]
+        b = sum(shape_bytes(dt, dims) for dt, dims in _SHAPE_RE.findall(head))
+        st.bytes_by_type[op] = st.bytes_by_type.get(op, 0) + b
+        st.count_by_type[op] = st.count_by_type.get(op, 0) + 1
+        st.total_bytes += b
+    return st
+
+
+def roofline_terms(
+    flops: float,
+    hlo_bytes: float,
+    coll_bytes: float,
+    chips: int,
+    hw: dict,
+    per_device: bool = True,
+) -> dict:
+    """All three terms in SECONDS.  ``per_device=True`` means flops/bytes
+    already describe one device's partitioned module (XLA cost analysis of
+    the post-SPMD executable); otherwise divide by chip count."""
+    div = 1 if per_device else chips
+    t_compute = (flops / div) / hw["peak_flops_bf16"]
+    t_memory = (hlo_bytes / div) / hw["hbm_bw"]
+    t_coll = (coll_bytes / div) / hw["ici_bw"]
+    dom = max(
+        ("compute", t_compute), ("memory", t_memory), ("collective", t_coll), key=lambda kv: kv[1]
+    )[0]
+    return {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dom,
+        "bound_s": max(t_compute, t_memory, t_coll),
+        # fraction of the roofline bound that is useful compute
+        "roofline_fraction": t_compute / max(t_compute, t_memory, t_coll, 1e-30),
+    }

@@ -1,0 +1,123 @@
+"""Per-instruction traffic/collective breakdown of a dry-run cell — the
+profiler for the §Perf hillclimbing loop (our 'profile' is the lowered
+HLO, per the CPU-only methodology).
+
+    PYTHONPATH=src python -m repro.roofline.breakdown --arch xlstm-1.3b --shape train_4k
+"""
+
+from __future__ import annotations
+
+import re
+
+from repro.roofline.hlo_costs import (
+    TRIP_RE,
+    _operands,
+    _shape_bytes,
+    parse_computations,
+    traffic_of,
+)
+
+SKIP = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast", "after-all",
+    "partition-id", "replica-id", "while", "conditional", "call",
+}
+
+
+def multipliers(comps, entry):
+    mult: dict[str, float] = {}
+
+    def visit(name, m):
+        if name not in comps:
+            return
+        mult[name] = mult.get(name, 0.0) + m
+        for ins in comps[name].instrs:
+            if ins.op == "while":
+                tm = TRIP_RE.search(ins.line)
+                trips = float(tm.group(1)) if tm else 1.0
+                bm = re.search(r"body=%?([^\s,)]+)", ins.line)
+                cm = re.search(r"condition=%?([^\s,)]+)", ins.line)
+                if bm:
+                    visit(bm.group(1), m * trips)
+                if cm:
+                    visit(cm.group(1), m * (trips + 1))
+            elif ins.op == "call":
+                km = re.search(r"to_apply=%?([^\s,)]+)", ins.line)
+                if km:
+                    visit(km.group(1), m)
+            elif ins.op == "conditional":
+                for key in ("true_computation", "false_computation"):
+                    km = re.search(rf"{key}=%?([^\s,)]+)", ins.line)
+                    if km:
+                        visit(km.group(1), m)
+                bm = re.search(r"branch_computations=\{([^}]*)\}", ins.line)
+                if bm:
+                    for b in re.findall(r"%?([^\s,]+)", bm.group(1)):
+                        visit(b, m)
+
+    visit(entry, 1.0)
+    return mult
+
+
+def top_traffic(hlo_text: str, k: int = 30):
+    comps, entry = parse_computations(hlo_text)
+    mult = multipliers(comps, entry)
+    items = []
+    for cname, m in mult.items():
+        comp = comps[cname]
+        for ins in comp.instrs:
+            if ins.op in SKIP:
+                continue
+            t = m * traffic_of(ins, comp, comps)
+            meta = re.search(r'op_name="([^"]+)"', ins.line)
+            items.append((t, m, ins.op, ins.type_str[:44], (meta.group(1)[-72:] if meta else ""), cname[:28]))
+    items.sort(reverse=True)
+    return items[:k]
+
+
+def top_collectives(hlo_text: str, k: int = 20):
+    comps, entry = parse_computations(hlo_text)
+    mult = multipliers(comps, entry)
+    items = []
+    for cname, m in mult.items():
+        comp = comps[cname]
+        for ins in comp.instrs:
+            if ins.op.split("-start")[0] in (
+                "all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute",
+            ):
+                res = _shape_bytes(ins.type_str)
+                opb = sum(_shape_bytes(comp.symtab.get(o, "")) for o in _operands(ins))
+                meta = re.search(r'op_name="([^"]+)"', ins.line)
+                items.append((m * max(res, opb), m, ins.op, ins.type_str[:44], (meta.group(1)[-72:] if meta else "")))
+    items.sort(reverse=True)
+    return items[:k]
+
+
+def main():
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--rules", default="baseline")
+    ap.add_argument("--gridlocal", action="store_true")
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--top", type=int, default=25)
+    args = ap.parse_args()
+
+    from repro.launch.dryrun import build_lowered
+
+    cfg, sh, mesh, lowered = build_lowered(
+        args.arch, args.shape, args.multi_pod, args.rules, args.gridlocal, args.grad_accum
+    )
+    txt = lowered.compile().as_text()
+    print(f"== top traffic instructions ({args.arch} x {args.shape}) ==")
+    for t, m, op, ts, name, cn in top_traffic(txt, args.top):
+        print(f"{t:10.3e}  x{m:6.0f} {op:18s} {ts:44s} {name}")
+    print("\n== top collectives ==")
+    for t, m, op, ts, name in top_collectives(txt, args.top):
+        print(f"{t:10.3e}  x{m:6.0f} {op:18s} {ts:44s} {name}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,393 @@
+"""Trip-count-aware cost extraction from optimized (post-SPMD) HLO text.
+
+``compiled.cost_analysis()`` counts every while-loop body ONCE, which
+undercounts scanned layer stacks (and the collectives inside them) by the
+trip count.  This module parses ``compiled.as_text()`` into computations,
+builds the call graph (while bodies x known_trip_count, conditional
+branches, calls), and accumulates per-device:
+
+  * flops            — 2*M*N*K for every dot (+1 flop/elem for reduces)
+  * traffic_bytes    — HBM traffic estimate: operand+result bytes of every
+                       top-level fusion/dot/copy/etc (fusion internals are
+                       by construction register/VMEM-resident)
+  * collective bytes — per type, max(operand, result) bytes per instance
+                       (≈ wire volume for AG/AR/RS/A2A/CP), tagged
+                       pod-crossing when a replica group spans pods
+
+Known limits (documented in EXPERIMENTS.md): elementwise flops ignored
+(VPU-dominated terms underestimate a few %), conditional branches both
+counted, convolutions not used by our models.
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1,
+    "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1, "f8e4m3b11fnuz": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "opaque": 0,
+}
+
+ARRAY_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+# name and '=' prefix; the op is found separately (types may contain
+# tuples with /*index=N*/ comments, so a single regex over the type fails)
+ASSIGN_RE = re.compile(r"^\s*(?:ROOT\s+)?%([^\s=]+)\s*=\s*(.*)$")
+OP_RE = re.compile(r"\b([a-z][a-z0-9\-]*)\(")
+COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([^\s(]+)\s*\(.*\)\s*->\s*.*\{")
+TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+CALLEE_RE = re.compile(r"(?:condition|body|to_apply|calls|branch_computations)=\{?%?([^,)}\s]+(?:, ?%[^,)}\s]+)*)\}?")
+
+COLLECTIVE_OPS = {
+    "all-reduce": "all-reduce", "all-reduce-start": "all-reduce",
+    "all-gather": "all-gather", "all-gather-start": "all-gather",
+    "reduce-scatter": "reduce-scatter",
+    "all-to-all": "all-to-all",
+    "collective-permute": "collective-permute", "collective-permute-start": "collective-permute",
+}
+SKIP_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast", "after-all",
+    "partition-id", "replica-id", "all-reduce-done", "all-gather-done",
+    "collective-permute-done", "custom-call", "iota", "rng-bit-generator",
+}
+# ops whose operands+result we count as HBM traffic at top level
+TRAFFIC_OPS_EXTRA = {
+    "fusion", "dot", "copy", "reduce", "sort", "gather", "scatter", "broadcast",
+    "dynamic-slice", "dynamic-update-slice", "transpose", "reshape", "slice",
+    "concatenate", "convert", "pad", "select", "add", "multiply", "subtract",
+    "divide", "exponential", "tanh", "compare", "reduce-window", "convolution",
+}
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of a (possibly tuple) HLO type string."""
+    tot = 0
+    for dt, dims in ARRAY_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        tot += n * _DTYPE_BYTES[dt]
+    return tot
+
+
+def _shape_dims(type_str: str) -> list[int]:
+    m = ARRAY_RE.search(type_str)
+    if not m:
+        return []
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+@dataclass
+class Instr:
+    name: str
+    type_str: str
+    op: str
+    line: str
+    op_pos: int = 0  # offset of the op call within `line` (operand parsing)
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: list = field(default_factory=list)
+    symtab: dict = field(default_factory=dict)  # %name -> type_str
+
+
+def parse_computations(text: str) -> tuple[dict, str]:
+    comps: dict[str, Computation] = {}
+    entry = None
+    cur: Computation | None = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        s = line.strip()
+        if cur is None:
+            if s.endswith("{") and ("->" in s):
+                m = COMP_HDR_RE.match(s)
+                if m:
+                    name = m.group(1)
+                    cur = Computation(name=name)
+                    if s.startswith("ENTRY"):
+                        entry = name
+            continue
+        if s == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = ASSIGN_RE.match(line)
+        if m:
+            nm, rest = m.group(1), m.group(2)
+            om = OP_RE.search(rest)
+            if not om:
+                continue
+            tstr = rest[: om.start()].strip()
+            op = om.group(1)
+            cur.symtab[nm] = tstr
+            cur.instrs.append(Instr(name=nm, type_str=tstr, op=op, line=rest, op_pos=om.start()))
+    return comps, entry
+
+
+def _operands(instr: "Instr") -> list[str]:
+    """Operand %names of an instruction (parens right after the op name)."""
+    line = instr.line
+    i = line.find("(", instr.op_pos)
+    if i < 0:
+        return []
+    depth = 0
+    j = i
+    for j in range(i, len(line)):
+        if line[j] == "(":
+            depth += 1
+        elif line[j] == ")":
+            depth -= 1
+            if depth == 0:
+                break
+    inner = line[i + 1 : j]
+    return re.findall(r"%([^\s,()]+)", inner)
+
+
+def _dot_flops(instr: Instr, comp: Computation) -> float:
+    ops = _operands(instr)
+    if not ops:
+        return 0.0
+    lhs_t = comp.symtab.get(ops[0], "")
+    lhs_dims = _shape_dims(lhs_t)
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", instr.line)
+    contract = 1
+    if m and m.group(1):
+        for d in m.group(1).split(","):
+            contract *= lhs_dims[int(d)] if int(d) < len(lhs_dims) else 1
+    out = _shape_dims(instr.type_str)
+    return 2.0 * math.prod(out or [0]) * contract
+
+
+def _parse_replica_groups(line: str) -> list[list[int]]:
+    m = re.search(r"replica_groups=\{(\{[0-9, ]+\}(?:, ?\{[0-9, ]+\})*)\}", line)
+    if m:
+        return [
+            [int(x) for x in g.split(",") if x.strip()]
+            for g in re.findall(r"\{([0-9, ]+)\}", m.group(1))
+        ]
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]<=\[([0-9,]+)\](?:T\(([0-9,]+)\))?", line)
+    if m:
+        ng, sz = int(m.group(1)), int(m.group(2))
+        dims = [int(x) for x in m.group(3).split(",")]
+        n = math.prod(dims)
+        ids = list(range(n))
+        if m.group(4):
+            perm = [int(x) for x in m.group(4).split(",")]
+            # reshape to dims, transpose by perm, flatten
+            import itertools
+
+            arr = ids
+            # build multi-d index walk
+            strides = [0] * len(dims)
+            acc = 1
+            for i in range(len(dims) - 1, -1, -1):
+                strides[i] = acc
+                acc *= dims[i]
+            out = []
+            shape_t = [dims[p] for p in perm]
+            for idx in itertools.product(*[range(d) for d in shape_t]):
+                orig = sum(idx[k] * strides[perm[k]] for k in range(len(perm)))
+                out.append(orig)
+            ids = out
+        return [ids[i * sz : (i + 1) * sz] for i in range(ng)]
+    return []
+
+
+def _fusion_root(ins: Instr, comps: dict):
+    """Root instruction of a fusion's called computation (the last instr —
+    HLO prints the ROOT last)."""
+    km = re.search(r"calls=%?([^\s,)]+)", ins.line)
+    if not km or km.group(1) not in comps:
+        return None, None
+    sub = comps[km.group(1)]
+    return (sub.instrs[-1] if sub.instrs else None), sub
+
+
+def _fusion_param_bytes(sub: Computation, skip: set[str] = frozenset()) -> dict[int, float]:
+    """Effective read-bytes per fusion parameter index.
+
+    A fusion parameter whose ONLY consumers are dynamic-slice/gather ops
+    reads just the slice window(s), not the whole buffer (scan bodies
+    slicing their stacked xs; KV-cache reads of the live prefix are NOT
+    sliced and stay fully charged)."""
+    # param name -> index, and name -> full bytes
+    param_idx: dict[str, int] = {}
+    for i2 in sub.instrs:
+        if i2.op == "parameter":
+            m = re.search(r"parameter\((\d+)\)", i2.line)
+            if m:
+                param_idx[i2.name] = int(m.group(1))
+    sliced_bytes: dict[str, float] = {}
+    full_consumers: set[str] = set()
+    for i2 in sub.instrs:
+        if i2.op == "parameter":
+            continue
+        ops = _operands(i2)
+        for o in ops:
+            if o in param_idx:
+                if i2.op in ("dynamic-slice", "gather", "slice"):
+                    sliced_bytes[o] = sliced_bytes.get(o, 0.0) + _shape_bytes(i2.type_str)
+                else:
+                    full_consumers.add(o)
+    out: dict[int, float] = {}
+    for name, idx in param_idx.items():
+        if name in skip:  # in-place accumulator: aliased, not re-read
+            out[idx] = 0.0
+            continue
+        full = _shape_bytes(sub.symtab.get(name, ""))
+        if name in full_consumers or name not in sliced_bytes:
+            out[idx] = full
+        else:
+            out[idx] = min(full, sliced_bytes[name])
+    return out
+
+
+def traffic_of(ins: Instr, comp: Computation, comps: dict) -> float:
+    """HBM traffic estimate for one top-level instruction.
+
+    In-place patterns (dynamic-update-slice — scan output stacking,
+    KV-cache writes — including when fused as a fusion root) are charged
+    for the touched SLICE, not the whole accumulator buffer; fusion
+    parameters consumed only through dynamic-slice are charged the slice."""
+    if ins.op in SKIP_OPS or ins.op in ("while", "conditional", "call"):
+        return 0.0
+    res = _shape_bytes(ins.type_str)
+    if ins.op in ("dynamic-slice", "gather", "slice"):
+        return 2.0 * res  # reads only the slice
+    if ins.op == "dynamic-update-slice":
+        ops = _operands(ins)
+        upd = _shape_bytes(comp.symtab.get(ops[1], "")) if len(ops) > 1 else 0
+        return 2.0 * upd
+    if ins.op == "fusion":
+        root, sub = _fusion_root(ins, comps)
+        write = res
+        skip: set[str] = set()
+        if root is not None and root.op == "dynamic-update-slice":
+            rops = _operands(root)
+            write = 2.0 * (_shape_bytes(sub.symtab.get(rops[1], "")) if len(rops) > 1 else 0)
+            if rops:
+                skip.add(rops[0])  # the in-place accumulator buffer
+        if sub is not None:
+            pb = _fusion_param_bytes(sub, skip)
+            reads = sum(pb.get(i, 0.0) for i in range(len(_operands(ins))))
+            return write + reads
+        return write + sum(_shape_bytes(comp.symtab.get(o, "")) for o in _operands(ins))
+    opb = sum(_shape_bytes(comp.symtab.get(o, "")) for o in _operands(ins))
+    return res + opb
+
+
+@dataclass
+class HloCosts:
+    flops: float = 0.0
+    traffic_bytes: float = 0.0
+    coll_bytes_by_type: dict = field(default_factory=dict)
+    coll_count_by_type: dict = field(default_factory=dict)
+    coll_bytes_cross_pod: float = 0.0
+    coll_bytes_total: float = 0.0
+    while_trips: dict = field(default_factory=dict)
+
+    def as_dict(self):
+        return {
+            "flops": self.flops,
+            "traffic_bytes": self.traffic_bytes,
+            "bytes_by_type": self.coll_bytes_by_type,
+            "count_by_type": self.coll_count_by_type,
+            "cross_pod_bytes": self.coll_bytes_cross_pod,
+            "total_bytes": self.coll_bytes_total,
+        }
+
+
+def analyze_hlo(text: str, chips_per_pod: int = 256) -> HloCosts:
+    comps, entry = parse_computations(text)
+    out = HloCosts()
+
+    # reachable computations with multipliers (ENTRY x1; while bodies x trip)
+    mult: dict[str, float] = {}
+
+    def visit(name: str, m: float):
+        if name not in comps:
+            return
+        mult[name] = mult.get(name, 0.0) + m
+        comp = comps[name]
+        for ins in comp.instrs:
+            if ins.op == "while":
+                tm = TRIP_RE.search(ins.line)
+                trips = float(tm.group(1)) if tm else 1.0
+                cm = re.search(r"condition=%?([^\s,)]+)", ins.line)
+                bm = re.search(r"body=%?([^\s,)]+)", ins.line)
+                if bm:
+                    visit(bm.group(1), m * trips)
+                if cm:
+                    visit(cm.group(1), m * (trips + 1))
+            elif ins.op == "conditional":
+                bm = re.search(r"branch_computations=\{([^}]*)\}", ins.line)
+                tm = re.search(r"(?:true|false)_computation=%?([^\s,)]+)", ins.line)
+                if bm:
+                    for b in re.findall(r"%?([^\s,]+)", bm.group(1)):
+                        visit(b, m)
+                for key in ("true_computation", "false_computation"):
+                    km = re.search(rf"{key}=%?([^\s,)]+)", ins.line)
+                    if km:
+                        visit(km.group(1), m)
+            elif ins.op == "call":
+                km = re.search(r"to_apply=%?([^\s,)]+)", ins.line)
+                if km:
+                    visit(km.group(1), m)
+
+    if entry:
+        visit(entry, 1.0)
+
+    # fusion sub-computations: dots can hide inside fusions — count their
+    # flops with the PARENT's multiplier, but not their traffic.
+    fusion_parent: dict[str, float] = {}
+    for cname, m in mult.items():
+        for ins in comps[cname].instrs:
+            if ins.op == "fusion":
+                km = re.search(r"calls=%?([^\s,)]+)", ins.line)
+                if km:
+                    fusion_parent[km.group(1)] = fusion_parent.get(km.group(1), 0.0) + m
+
+    for cname, m in mult.items():
+        comp = comps[cname]
+        for ins in comp.instrs:
+            if ins.op == "dot":
+                out.flops += m * _dot_flops(ins, comp)
+            elif ins.op in ("reduce", "reduce-window"):
+                ops = _operands(ins)
+                if ops:
+                    out.flops += m * _shape_bytes(comp.symtab.get(ops[0], "")) / 4.0
+            if ins.op in COLLECTIVE_OPS:
+                ctype = COLLECTIVE_OPS[ins.op]
+                res_b = _shape_bytes(ins.type_str)
+                if ins.op.endswith("-start"):
+                    res_b = res_b / 2  # start result = (input, output) tuple
+                opb = sum(_shape_bytes(comp.symtab.get(o, "")) for o in _operands(ins))
+                b = m * max(res_b, opb)
+                out.coll_bytes_by_type[ctype] = out.coll_bytes_by_type.get(ctype, 0.0) + b
+                out.coll_count_by_type[ctype] = out.coll_count_by_type.get(ctype, 0) + int(m)
+                out.coll_bytes_total += b
+                groups = _parse_replica_groups(ins.line)
+                if any(len({d // chips_per_pod for d in g}) > 1 for g in groups):
+                    out.coll_bytes_cross_pod += b
+            out.traffic_bytes += m * traffic_of(ins, comp, comps)
+
+    # dots inside fusions
+    for fname, m in fusion_parent.items():
+        if fname in comps:
+            comp = comps[fname]
+            for ins in comp.instrs:
+                if ins.op == "dot":
+                    out.flops += m * _dot_flops(ins, comp)
+
+    return out

@@ -1,0 +1,50 @@
+"""Losses.  The CE is computed CHUNKED over the sequence so the full
+(B, S, V) logits tensor never materialises — required for the 256k-vocab
+architectures (gemma2, seamless) at 4k..32k sequence lengths."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import logits_from
+from repro.sharding import constrain
+
+
+def chunked_softmax_ce(cfg, params, hidden, labels, chunk: int = 512):
+    """hidden (B, S, D); labels (B, S) int32 with -1 = ignore.
+
+    Returns (mean_ce, n_tokens).  Scans over S/chunk chunks; each chunk's
+    logits are formed, reduced and discarded (remat-friendly).
+    """
+    b, s, d = hidden.shape
+    chunk = min(chunk, s)
+    if s % chunk:  # pad with ignored labels
+        pad = chunk - s % chunk
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+        s += pad
+    nc = s // chunk
+    hs = jnp.moveaxis(hidden.reshape(b, nc, chunk, d), 1, 0)
+    ls = jnp.moveaxis(labels.reshape(b, nc, chunk), 1, 0)
+
+    @jax.checkpoint  # logits recomputed in backward: never stored per-chunk
+    def chunk_ce(h, lab):
+        h = constrain(h, ("batch", None, None))
+        lg = logits_from(cfg, params, h)  # (B, C, Vp) f32, padded ids masked
+        lg = constrain(lg, ("batch", None, "vocab"))
+        mask = lab >= 0
+        lab_safe = jnp.maximum(lab, 0)
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        gold = jnp.take_along_axis(lg, lab_safe[..., None], axis=-1)[..., 0]
+        ce = jnp.where(mask, lse - gold, 0.0)
+        return jnp.sum(ce), jnp.sum(mask)
+
+    def body(carry, inp):
+        tot, cnt = carry
+        h, lab = inp
+        ce, n = chunk_ce(h, lab)
+        return (tot + ce, cnt + n), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0.0), jnp.int32(0)), (hs, ls))
+    return tot / jnp.maximum(cnt.astype(jnp.float32), 1.0), cnt

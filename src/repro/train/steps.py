@@ -1,0 +1,262 @@
+"""Step builders: synchronous train_step, GridLocal train_step (the
+paper's minimal-sync pattern over the `pod` axis), prefill_step and
+decode (serve) step.  Every builder returns pure functions plus the
+ShapeAxes spec trees needed to derive in/out shardings for jit.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.optim.outer import OuterConfig, outer_init, outer_update
+from repro.sharding import ShapeAxes
+from repro.train.losses import chunked_softmax_ce
+
+
+# ---------------------------------------------------------------------------
+# State specs
+# ---------------------------------------------------------------------------
+
+
+def _zeros_like_spec(s: ShapeAxes, dtype=None) -> ShapeAxes:
+    return ShapeAxes(shape=s.shape, dtype=dtype or s.dtype, axes=s.axes)
+
+
+def train_state_specs(cfg: ModelConfig, n_pods: int = 0) -> dict:
+    """ShapeAxes tree of the full train state (params + AdamW moments
+    [+ GridLocal anchor/momentum]).  With n_pods > 0 every leaf gains a
+    leading 'grid' axis of that size (one replica per pod, sharded over
+    `pod` by the GRIDLOCAL rules)."""
+    p_specs = T.param_specs(cfg)
+    is_sa = lambda x: isinstance(x, ShapeAxes)
+    f32 = lambda s: ShapeAxes(shape=s.shape, dtype="float32", axes=s.axes)
+    state = {
+        "params": p_specs,
+        "opt": {
+            "step": ShapeAxes(shape=(), dtype="int32", axes=()),
+            "m": jax.tree.map(f32, p_specs, is_leaf=is_sa),
+            "v": jax.tree.map(f32, p_specs, is_leaf=is_sa),
+        },
+    }
+    if n_pods:
+        state = jax.tree.map(
+            lambda s: ShapeAxes(shape=(n_pods, *s.shape), dtype=s.dtype, axes=("grid", *s.axes)),
+            state,
+            is_leaf=is_sa,
+        )
+        # outer anchor/momentum are identical on every pod — unstacked
+        state["outer"] = {
+            "anchor": jax.tree.map(f32, p_specs, is_leaf=is_sa),
+            "momentum": jax.tree.map(f32, p_specs, is_leaf=is_sa),
+        }
+    return state
+
+
+def materialize_state(cfg: ModelConfig, key: jax.Array) -> dict:
+    params = T.init_params(cfg, key)
+    return {"params": params, "opt": adamw_init(params)}
+
+
+# ---------------------------------------------------------------------------
+# Synchronous train step
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    opt_cfg: AdamWConfig = AdamWConfig(),
+    loss_chunk: int = 512,
+    grad_accum: int = 1,
+):
+    """Plain synchronous data-parallel/FSDP/TP step.  Gradients reduce over
+    every batch-sharded axis (GSPMD inserts the all-reduces).
+
+    grad_accum > 1 splits the global batch into microbatches scanned
+    sequentially with fp32 gradient accumulation — activation memory drops
+    ~linearly while keeping the same global batch semantics."""
+
+    def loss_fn(params, batch):
+        hidden, aux = T.forward_train(
+            cfg, params, batch["tokens"], batch.get("frontend"), return_hidden=True
+        )
+        ce, n_tok = chunked_softmax_ce(cfg, params, hidden, batch["labels"], chunk=loss_chunk)
+        loss = ce + aux["aux_loss"] + aux["z_loss"]
+        return loss, {"ce": ce, "aux": aux["aux_loss"], "n_tok": n_tok}
+
+    def grads_of(params, batch):
+        if grad_accum == 1:
+            return jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+
+        def split(x):
+            b = x.shape[0]
+            assert b % grad_accum == 0, (b, grad_accum)
+            return x.reshape(grad_accum, b // grad_accum, *x.shape[1:])
+
+        micro = jax.tree.map(split, batch)
+
+        def body(carry, mb):
+            acc, loss_acc, met_acc = carry
+            (loss, met), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+            acc = jax.tree.map(lambda a, x: a + x.astype(jnp.float32), acc, g)
+            met_acc = {
+                "ce": met_acc["ce"] + met["ce"],
+                "aux": met_acc["aux"] + met["aux"],
+                "n_tok": met_acc["n_tok"] + met["n_tok"],
+            }
+            return (acc, loss_acc + loss, met_acc), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        met0 = {"ce": jnp.float32(0), "aux": jnp.float32(0), "n_tok": jnp.int32(0)}
+        (grads, loss, met), _ = jax.lax.scan(body, (zeros, jnp.float32(0), met0), micro)
+        inv = 1.0 / grad_accum
+        grads = jax.tree.map(lambda g: g * inv, grads)
+        return (loss * inv, {**met, "ce": met["ce"] * inv, "aux": met["aux"] * inv}), grads
+
+    def train_step(state, batch):
+        (loss, metrics), grads = grads_of(state["params"], batch)
+        new_params, new_opt, opt_metrics = adamw_update(opt_cfg, grads, state["opt"], state["params"])
+        return {"params": new_params, "opt": new_opt}, {
+            "loss": loss,
+            **metrics,
+            **opt_metrics,
+        }
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# GridLocal train step (paper technique: pod-local inner steps, one merge)
+# ---------------------------------------------------------------------------
+
+
+def make_gridlocal_train_step(
+    cfg: ModelConfig,
+    mesh,
+    opt_cfg: AdamWConfig = AdamWConfig(),
+    outer_cfg: OuterConfig = OuterConfig(),
+    loss_chunk: int = 512,
+    grad_accum: int = 1,
+):
+    """The paper's minimal-sync pattern over the `pod` axis.
+
+    State layout: params/opt carry a leading `n_pods` axis sharded over
+    `pod` (each pod = an independent "grid site" with its own model
+    replica); the outer anchor/momentum are unstacked (identical across
+    pods).  The inner step runs under ``vmap`` over the pod axis — because
+    every op is elementwise in that axis, GSPMD keeps ALL inner collectives
+    within a pod (no DCN traffic).  Every ``h_steps`` the pods merge via
+    the paper's size-weighted sufficient-statistics aggregation (uniform
+    token counts ⇒ mean over the pod axis — the ONLY cross-pod collective)
+    followed by an outer Nesterov step; pods restart from the new anchor.
+    """
+    n_pods = mesh.shape["pod"]
+    inner = make_train_step(cfg, opt_cfg, loss_chunk, grad_accum)
+    p_specs = T.param_specs(cfg)
+    is_sa = lambda x: isinstance(x, ShapeAxes)
+
+    def step_fn(state, batch):
+        from repro.sharding import constrain
+
+        split = lambda x: x.reshape(n_pods, x.shape[0] // n_pods, *x.shape[1:])
+        vbatch = jax.tree.map(split, batch)
+        vstate = {"params": state["params"], "opt": state["opt"]}
+        new_inner, metrics = jax.vmap(inner)(vstate, vbatch)
+        step_ct = new_inner["opt"]["step"][0]
+
+        def do_merge(args):
+            params, outer = args
+            # the single synchronization: aggregate the pods' sufficient
+            # statistics (parameter sums weighted by examples — uniform
+            # here) exactly as the paper merges per-site models.  The
+            # merged leaves are constrained to the SAME intra-pod layout
+            # as the inputs so the cross-pod all-reduce moves only each
+            # device's shard (no involuntary resharding — §Perf iteration).
+            if outer_cfg.compress == "int8":
+                # gradient compression: only int8 deltas (+1 scale/leaf)
+                # cross the pod boundary; anchor is pod-replicated.
+                from repro.optim.outer import dequantize_delta, quantize_delta
+
+                def merge_leaf(s, x, anchor):
+                    delta = x.astype(jnp.float32) - anchor[None]
+                    q, scale = quantize_delta(delta)
+                    # sum in int16 so the cross-pod wire stays narrow
+                    # (int8 ring-sum would overflow; int16 = 2x fewer
+                    # bytes than the f32 mean)
+                    q_sum = jnp.sum(q.astype(jnp.int16), axis=0)
+                    q_mean = q_sum.astype(jnp.float32) / x.shape[0]
+                    return constrain(anchor + dequantize_delta(q_mean, scale), s.axes)
+
+                merged = jax.tree.map(
+                    merge_leaf, p_specs, params, outer["anchor"], is_leaf=is_sa
+                )
+            else:
+                merged = jax.tree.map(
+                    lambda s, x: constrain(jnp.mean(x.astype(jnp.float32), axis=0), s.axes),
+                    p_specs, params, is_leaf=lambda x: is_sa(x),
+                )
+            new_p, new_outer = outer_update(outer_cfg, outer, merged)
+            new_outer = {
+                k: jax.tree.map(
+                    lambda s, x: constrain(x, s.axes), p_specs, new_outer[k], is_leaf=is_sa
+                )
+                for k in ("anchor", "momentum")
+            }
+            stacked = jax.tree.map(
+                lambda s, a, p: constrain(
+                    jnp.broadcast_to(a[None].astype(p.dtype), p.shape), ("grid", *s.axes)
+                ),
+                p_specs, new_p, params, is_leaf=is_sa,
+            )
+            return stacked, new_outer
+
+        def no_merge(args):
+            return args
+
+        params, outer = jax.lax.cond(
+            step_ct % outer_cfg.h_steps == 0,
+            do_merge,
+            no_merge,
+            (new_inner["params"], state["outer"]),
+        )
+        out = {"params": params, "opt": new_inner["opt"], "outer": outer}
+        metrics = jax.tree.map(lambda x: jnp.mean(x.astype(jnp.float32), axis=0), metrics)
+        return out, metrics
+
+    return step_fn
+
+
+def gridlocal_init(cfg: ModelConfig, key: jax.Array, n_pods: int) -> dict:
+    params = T.init_params(cfg, key)
+    stack = lambda t: jax.tree.map(lambda x: jnp.broadcast_to(x[None], (n_pods, *x.shape)), t)
+    return {
+        "params": stack(params),
+        "opt": stack(adamw_init(params)),
+        "outer": outer_init(params),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Serve steps
+# ---------------------------------------------------------------------------
+
+
+def make_prefill_step(cfg: ModelConfig, chunk: int = 1024):
+    def prefill_step(params, batch, cache):
+        return T.prefill(cfg, params, batch["tokens"], cache, batch.get("frontend"), chunk=chunk)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode_fn(params, batch, cache):
+        return T.decode_step(cfg, params, batch["token"], batch["pos"], cache)
+
+    return decode_fn

@@ -1,0 +1,81 @@
+"""DAG job model — the Condor/DAGMan analogue the paper evaluates against.
+
+A Job is a Python callable plus metadata (inputs/outputs in bytes, the
+site it runs on).  The DAG enforces ordering; the engine (engine.py)
+executes it with a simulated grid clock, fault injection and rescue
+semantics.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+
+@dataclass
+class Job:
+    name: str
+    fn: Callable[..., Any]
+    deps: list[str] = field(default_factory=list)
+    site: int = 0  # grid site executing this job (overhead model: link matrix)
+    input_bytes: int = 0  # data staged in from the submit node
+    output_bytes: int = 0  # data staged back
+    retries: int = 2  # DAGMan-style automatic retry budget
+    sim_compute_s: float = 0.0  # simulated compute (paper-scale what-if
+    # studies); added to the simulated clock WITHOUT real sleeping
+
+    # filled by the engine
+    status: str = "pending"  # pending | running | done | failed
+    attempts: int = 0
+    result: Any = None
+    t_submit: float = 0.0
+    t_start: float = 0.0
+    t_end: float = 0.0
+
+
+class DAG:
+    def __init__(self, name: str = "dag"):
+        self.name = name
+        self.jobs: dict[str, Job] = {}
+
+    def add(self, job: Job) -> Job:
+        if job.name in self.jobs:
+            raise ValueError(f"duplicate job {job.name!r}")
+        for d in job.deps:
+            if d not in self.jobs:
+                raise ValueError(f"job {job.name!r} depends on unknown {d!r}")
+        self.jobs[job.name] = job
+        return job
+
+    def job(self, name: str, fn: Callable, deps: list[str] | None = None, **kw) -> Job:
+        return self.add(Job(name=name, fn=fn, deps=deps or [], **kw))
+
+    def ready(self) -> list[Job]:
+        out = []
+        for j in self.jobs.values():
+            if j.status == "pending" and all(self.jobs[d].status == "done" for d in j.deps):
+                out.append(j)
+        return out
+
+    def done(self) -> bool:
+        return all(j.status == "done" for j in self.jobs.values())
+
+    def failed(self) -> list[Job]:
+        return [j for j in self.jobs.values() if j.status == "failed"]
+
+    def validate_acyclic(self) -> None:
+        seen: dict[str, int] = {}
+
+        def visit(n: str):
+            st = seen.get(n, 0)
+            if st == 1:
+                raise ValueError(f"cycle through {n!r}")
+            if st == 2:
+                return
+            seen[n] = 1
+            for d in self.jobs[n].deps:
+                visit(d)
+            seen[n] = 2
+
+        for n in self.jobs:
+            visit(n)

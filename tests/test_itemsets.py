@@ -1,0 +1,125 @@
+"""Algorithm 2 (GFM) + FDM baseline: exactness vs brute force, round
+counts (the paper's 2-vs-k claim), and communication accounting."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.apriori import (
+    TransactionDB,
+    apriori_join,
+    bruteforce_frequent,
+    count_supports,
+    local_apriori,
+    pack_bool_matrix,
+    pack_itemsets,
+)
+from repro.core.fdm import fdm_mine
+from repro.core.gfm import gfm_mine
+from repro.data.synthetic import ibm_transactions, split_transactions
+
+
+def make_sites(seed=1, n_tx=2000, n_items=50, n_sites=4, **kw):
+    dense = ibm_transactions(seed=seed, n_tx=n_tx, n_items=n_items, **kw)
+    shards = split_transactions(dense, n_sites, seed=0)
+    return dense, [TransactionDB.from_dense(s) for s in shards]
+
+
+class TestApriori:
+    def test_pack_roundtrip_supports(self):
+        rng = np.random.default_rng(0)
+        dense = rng.random((100, 40)) < 0.3
+        db = TransactionDB.from_dense(dense)
+        sets = [(0,), (1, 3), (2, 5, 7)]
+        got = count_supports(db, sets)
+        want = [dense[:, list(s)].all(axis=1).sum() for s in sets]
+        assert list(got) == want
+
+    def test_apriori_join_prefix_semantics(self):
+        prev = [(0, 1), (0, 2), (1, 2), (1, 3)]
+        cands = apriori_join(prev)
+        assert (0, 1, 2) in cands  # all subsets frequent
+        assert (1, 2, 3) not in cands  # (2,3) missing
+
+    def test_local_apriori_counts_match_bruteforce(self):
+        dense, sites = make_sites(n_sites=1)
+        res = local_apriori(sites[0], 3, min_count=int(0.1 * len(dense)))
+        oracle = bruteforce_frequent(dense, 3, int(0.1 * len(dense)))
+        got = {its: res.counts[its] for lv in (1, 2, 3) for its in res.frequent[lv]}
+        assert got == oracle
+
+
+class TestGFMvsFDMvsOracle:
+    @pytest.mark.parametrize("seed", [1, 2, 3])
+    def test_exactness(self, seed):
+        dense, sites = make_sites(seed=seed)
+        minsup, k = 0.08, 4
+        oracle = bruteforce_frequent(dense, k, int(np.ceil(minsup * len(dense))))
+        g = gfm_mine(sites, k, minsup)
+        f = fdm_mine(sites, k, minsup)
+        assert g.frequent == oracle
+        assert f.frequent == oracle
+
+    def test_round_counts_paper_claim(self):
+        """GFM: single sync = 2 passes; FDM: one per level = k (paper:
+        'only 2 communication passes (instead of 4) were required')."""
+        dense, sites = make_sites(seed=5)
+        g = gfm_mine(sites, 4, 0.08)
+        f = fdm_mine(sites, 4, 0.08)
+        assert g.comm.rounds == 2
+        assert f.comm.rounds == 4
+        assert g.comm.rounds < f.comm.rounds
+
+    def test_fdm_remote_support_cost_positive(self):
+        """The paper measures FDM's remote-support computation at ~13% of
+        its compute; ours must be a nonzero share."""
+        dense, sites = make_sites(seed=6)
+        f = fdm_mine(sites, 4, 0.08)
+        assert f.remote_count_time > 0
+        assert f.remote_count_time < f.total_count_time
+
+    @given(
+        st.integers(0, 10_000),
+        st.integers(2, 4),
+        st.sampled_from([0.1, 0.15, 0.25]),
+    )
+    @settings(max_examples=15, deadline=None)
+    def test_property_random_dbs(self, seed, n_sites, minsup):
+        """Property: for ANY random transaction DB and site split, GFM and
+        FDM return exactly the brute-force frequent itemsets."""
+        rng = np.random.default_rng(seed)
+        dense = rng.random((rng.integers(50, 300), rng.integers(8, 24))) < rng.uniform(0.1, 0.4)
+        shards = split_transactions(dense, n_sites, seed=seed)
+        shards = [s for s in shards if len(s)]
+        sites = [TransactionDB.from_dense(s) for s in shards]
+        k = 3
+        oracle = bruteforce_frequent(dense, k, int(np.ceil(minsup * len(dense))))
+        g = gfm_mine(sites, k, minsup)
+        f = fdm_mine(sites, k, minsup)
+        assert g.frequent == oracle
+        assert f.frequent == oracle
+
+    def test_gfm_nonuniform_local_threshold_falls_back_to_more_rounds(self):
+        """With a LOOSER local threshold the lemma still holds; with a
+        TIGHTER one GFM may descend (extra rounds) but stays exact only
+        when the lemma applies — we assert exactness for looser."""
+        dense, sites = make_sites(seed=9)
+        minsup = 0.1
+        oracle = bruteforce_frequent(dense, 4, int(np.ceil(minsup * len(dense))))
+        g = gfm_mine(sites, 4, minsup, local_minsup=minsup * 0.6)
+        assert g.frequent == oracle
+
+
+class TestCommAccounting:
+    def test_gfm_bytes_scale_with_pool(self):
+        dense, sites = make_sites(seed=2)
+        g = gfm_mine(sites, 4, 0.08)
+        assert g.comm.bytes_sent > 0
+        assert g.comm.per_round_bytes[0] > 0
+        assert len(g.comm.per_round_bytes) == g.comm.rounds
+
+    def test_kernel_backend_equivalence(self):
+        dense, sites = make_sites(seed=3, n_tx=500)
+        g1 = gfm_mine(sites, 3, 0.1, backend="jnp")
+        g2 = gfm_mine(sites, 3, 0.1, backend="kernel")
+        assert g1.frequent == g2.frequent

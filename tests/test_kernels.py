@@ -1,0 +1,197 @@
+"""Per-kernel validation: Pallas (interpret mode on CPU) vs pure-jnp
+oracles, swept over shapes/dtypes with hypothesis."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.apriori import pack_bool_matrix, pack_itemsets
+from repro.kernels import ops
+from repro.kernels.ref import kmeans_assign_ref, support_count_ref
+
+
+class TestKMeansAssignKernel:
+    @given(
+        n=st.integers(1, 700),
+        d=st.integers(1, 160),
+        k=st.integers(1, 130),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_matches_oracle(self, n, d, k, seed):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+        c = jnp.asarray(rng.normal(size=(k, d)).astype(np.float32))
+        a_k, d_k = ops.kmeans_assign(x, c)
+        a_r, d_r = kmeans_assign_ref(x, c)
+        np.testing.assert_allclose(np.asarray(d_k), np.asarray(d_r), rtol=1e-3, atol=1e-3)
+        # argmin ties can differ only when two centers are equidistant
+        diff = np.asarray(a_k) != np.asarray(a_r)
+        if diff.any():
+            dd = np.asarray(jnp.sum((x[diff, None] - c[None]) ** 2, -1))
+            best2 = np.sort(dd, axis=1)[:, :2]
+            np.testing.assert_allclose(best2[:, 0], best2[:, 1], rtol=1e-4, atol=1e-4)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtypes(self, dtype):
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.normal(size=(128, 16))).astype(dtype)
+        c = jnp.asarray(rng.normal(size=(8, 16))).astype(dtype)
+        a_k, _ = ops.kmeans_assign(x, c)
+        a_r, _ = kmeans_assign_ref(x, c)
+        assert (np.asarray(a_k) == np.asarray(a_r)).mean() > 0.97
+
+    @pytest.mark.parametrize("block_n", [64, 128, 512])
+    def test_block_shapes(self, block_n):
+        rng = np.random.default_rng(1)
+        x = jnp.asarray(rng.normal(size=(300, 24)).astype(np.float32))
+        c = jnp.asarray(rng.normal(size=(12, 24)).astype(np.float32))
+        a_k, d_k = ops.kmeans_assign(x, c, block_n=block_n)
+        a_r, d_r = kmeans_assign_ref(x, c)
+        assert np.array_equal(np.asarray(a_k), np.asarray(a_r))
+
+
+class TestSupportCountKernel:
+    @given(
+        n=st.integers(1, 1200),
+        items=st.integers(1, 200),
+        c=st.integers(1, 300),
+        density=st.floats(0.05, 0.6),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_matches_oracle(self, n, items, c, density, seed):
+        rng = np.random.default_rng(seed)
+        dense = rng.random((n, items)) < density
+        tx = jnp.asarray(pack_bool_matrix(dense))
+        sets = [
+            tuple(sorted(rng.choice(items, size=rng.integers(1, min(5, items) + 1), replace=False).tolist()))
+            for _ in range(c)
+        ]
+        masks = jnp.asarray(pack_itemsets(sets, items))
+        got = ops.support_count(tx, masks)
+        want = support_count_ref(tx, masks)
+        assert np.array_equal(np.asarray(got), np.asarray(want))
+        # cross-check against numpy ground truth
+        direct = np.array([dense[:, list(s)].all(axis=1).sum() for s in sets])
+        np.testing.assert_array_equal(np.asarray(got), direct)
+
+    @pytest.mark.parametrize("blocks", [(128, 128), (512, 512), (256, 1024)])
+    def test_block_shapes(self, blocks):
+        bn, bc = blocks
+        rng = np.random.default_rng(2)
+        dense = rng.random((700, 64)) < 0.3
+        tx = jnp.asarray(pack_bool_matrix(dense))
+        sets = [(0, 1), (5,), (2, 9, 33)] * 50
+        masks = jnp.asarray(pack_itemsets(sets, 64))
+        got = ops.support_count(tx, masks, block_n=bn, block_c=bc)
+        want = support_count_ref(tx, masks)
+        assert np.array_equal(np.asarray(got), np.asarray(want))
+
+    def test_wide_item_universe(self):
+        """> 32 words (1024+ items) exercises the W loop."""
+        rng = np.random.default_rng(3)
+        dense = rng.random((200, 1100)) < 0.1
+        tx = jnp.asarray(pack_bool_matrix(dense))
+        sets = [tuple(sorted(rng.choice(1100, size=2, replace=False).tolist())) for _ in range(40)]
+        masks = jnp.asarray(pack_itemsets(sets, 1100))
+        got = ops.support_count(tx, masks)
+        direct = np.array([dense[:, list(s)].all(axis=1).sum() for s in sets])
+        np.testing.assert_array_equal(np.asarray(got), direct)
+
+
+class TestSLSTMKernel:
+    """The VMEM-resident-weights sLSTM kernel (§Perf, xlstm train cell)
+    must match the sequential JAX reference bit-for-tolerance."""
+
+    def _setup(self, seed, b, s, d, h):
+        from repro.models.config import ModelConfig
+        from repro.models import xlstm as X
+        from repro.models.layers import init_from_specs
+
+        cfg = ModelConfig(n_layers=1, d_model=d, n_heads=h, n_kv_heads=h,
+                          head_dim=d // h, d_ff=0, vocab=64, dtype="float32")
+        p = init_from_specs(jax.random.PRNGKey(seed), X.slstm_spec(cfg))
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.normal(size=(b, s, d)).astype(np.float32) * 0.5)
+        return cfg, p, x
+
+    @pytest.mark.parametrize("b,s,d,h,tc", [(2, 16, 32, 2, 4), (3, 24, 64, 4, 8), (1, 8, 16, 1, 8)])
+    def test_matches_reference(self, b, s, d, h, tc):
+        from repro.models import xlstm as X
+
+        cfg, p, x = self._setup(0, b, s, d, h)
+        y_ref, cache_ref = X.apply_slstm(cfg, p, x)
+        wx = jnp.einsum("bsd,dhq->bshq", x, p["w"])
+        pdim = d // h
+        zero = jnp.zeros((b, h, pdim), jnp.float32)
+        hids, (cT, nT, hT) = ops.slstm_scan(wx, p["r"], p["bias"], (zero, zero, zero), t_chunk=tc)
+        from repro.models.layers import rms_norm
+
+        y_k = rms_norm(hids.reshape(b, s, d), p["out_norm"]["scale"]) @ p["w_out"]
+        np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_ref), rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(np.asarray(hT), np.asarray(cache_ref["hid"]), rtol=2e-4, atol=2e-4)
+
+    def test_state_carries_across_chunks(self):
+        cfg, p, x = self._setup(1, 2, 32, 32, 2)
+        wx = jnp.einsum("bsd,dhq->bshq", x, p["w"])
+        zero = jnp.zeros((2, 2, 16), jnp.float32)
+        h_all, st_all = ops.slstm_scan(wx, p["r"], p["bias"], (zero, zero, zero), t_chunk=32)
+        h_c, st_c = ops.slstm_scan(wx, p["r"], p["bias"], (zero, zero, zero), t_chunk=4)
+        np.testing.assert_allclose(np.asarray(h_all), np.asarray(h_c), rtol=1e-5, atol=1e-5)
+        for a, b_ in zip(st_all, st_c):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b_), rtol=1e-5, atol=1e-5)
+
+
+class TestFlashAttentionKernel:
+    """Flash attention (VMEM-resident score blocks — §Roofline fix for the
+    fleet-wide memory-dominated attention streams) vs the chunked oracle."""
+
+    @staticmethod
+    def _ref(q, k, v, causal, window, cap):
+        from repro.models.attention import chunked_attention, _grouped
+
+        b, sq, h, dh = q.shape
+        kvh = k.shape[2]
+        out = chunked_attention(
+            _grouped(q, kvh), k, v,
+            jnp.arange(sq, dtype=jnp.int32), jnp.arange(k.shape[1], dtype=jnp.int32),
+            causal=causal, window=window, cap=cap, chunk=64,
+        )
+        return out.reshape(b, sq, h, dh)
+
+    @given(
+        b=st.integers(1, 3),
+        sq=st.integers(1, 96),
+        h_g=st.sampled_from([(1, 1), (2, 1), (4, 2), (4, 4)]),
+        dh=st.sampled_from([16, 32, 64]),
+        causal=st.booleans(),
+        window=st.sampled_from([0, 16]),
+        cap=st.sampled_from([0.0, 30.0]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    @settings(max_examples=20, deadline=None)
+    def test_matches_oracle(self, b, sq, h_g, dh, causal, window, cap, seed):
+        h, kvh = h_g
+        rng = np.random.default_rng(seed)
+        skv = sq if causal else ((sq + 15) // 16) * 16  # non-causal: divisible
+        q = jnp.asarray(rng.normal(size=(b, sq, h, dh)).astype(np.float32))
+        k = jnp.asarray(rng.normal(size=(b, skv, kvh, dh)).astype(np.float32))
+        v = jnp.asarray(rng.normal(size=(b, skv, kvh, dh)).astype(np.float32))
+        got = ops.flash_attention(q, k, v, causal=causal, window=window, cap=cap,
+                                  block_q=16, block_k=16)
+        want = self._ref(q, k, v, causal, window, cap)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-4, atol=3e-4)
+
+    def test_bf16(self):
+        rng = np.random.default_rng(0)
+        q = jnp.asarray(rng.normal(size=(2, 32, 4, 32))).astype(jnp.bfloat16)
+        k = jnp.asarray(rng.normal(size=(2, 32, 2, 32))).astype(jnp.bfloat16)
+        v = jnp.asarray(rng.normal(size=(2, 32, 2, 32))).astype(jnp.bfloat16)
+        got = ops.flash_attention(q, k, v, block_q=16, block_k=16)
+        want = self._ref(q, k, v, True, 0, 0.0)
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32), rtol=5e-2, atol=5e-2
+        )

@@ -1,0 +1,105 @@
+"""Sufficient-statistics identities (paper §3.1) — unit + property tests.
+
+The variance-based merge is only correct because SSE is additive under
+the s(i,j) formula; these tests pin that invariant down exactly.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.stats import (
+    SuffStats,
+    merge_cost,
+    merge_stats,
+    pairwise_sq_dists,
+    stats_from_assignment,
+    total_sse,
+)
+
+
+def direct_sse(x, center):
+    return float(np.sum((x - center) ** 2))
+
+
+def make_stats(x, assign, k):
+    return stats_from_assignment(jnp.asarray(x), jnp.asarray(assign), k)
+
+
+class TestStatsFromAssignment:
+    def test_single_cluster(self):
+        rng = np.random.default_rng(0)
+        x = rng.normal(size=(50, 3)).astype(np.float32)
+        st_ = make_stats(x, np.zeros(50, np.int32), 1)
+        assert float(st_.sizes[0]) == 50
+        np.testing.assert_allclose(np.asarray(st_.centers[0]), x.mean(0), rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(float(st_.sse[0]), direct_sse(x, x.mean(0)), rtol=1e-3)
+
+    def test_empty_cluster_slots(self):
+        x = np.ones((10, 2), np.float32)
+        st_ = make_stats(x, np.zeros(10, np.int32), 3)
+        assert float(st_.sizes[1]) == 0 and float(st_.sizes[2]) == 0
+        assert float(st_.sse[1]) == 0
+
+
+class TestMergeFormula:
+    @given(
+        st.integers(2, 40),
+        st.integers(2, 40),
+        st.integers(1, 5),
+        st.integers(0, 2**31 - 1),
+    )
+    @settings(max_examples=30, deadline=None)
+    def test_merged_sse_equals_pooled_sse(self, n1, n2, d, seed):
+        """Paper's var_new = var_i + var_j + s(i,j) must equal the SSE of
+        the pooled points around the pooled centroid — exactly."""
+        rng = np.random.default_rng(seed)
+        a = rng.normal(0, 1, (n1, d)).astype(np.float32)
+        b = rng.normal(3, 2, (n2, d)).astype(np.float32)
+        x = np.concatenate([a, b])
+        assign = np.array([0] * n1 + [1] * n2, np.int32)
+        st_ = make_stats(x, assign, 2)
+        merged = merge_stats(st_, jnp.int32(0), jnp.int32(1))
+        pooled_center = x.mean(0)
+        np.testing.assert_allclose(
+            float(merged.sse[0]), direct_sse(x, pooled_center), rtol=2e-3, atol=2e-3
+        )
+        np.testing.assert_allclose(np.asarray(merged.centers[0]), pooled_center, rtol=1e-4, atol=1e-4)
+        assert float(merged.sizes[0]) == n1 + n2
+        assert float(merged.sizes[1]) == 0  # slot j died
+
+    def test_merge_cost_symmetry_and_masking(self):
+        rng = np.random.default_rng(1)
+        x = rng.normal(size=(30, 2)).astype(np.float32)
+        assign = rng.integers(0, 3, 30).astype(np.int32)
+        st_ = make_stats(x, assign, 4)  # slot 3 empty
+        c = np.asarray(merge_cost(st_))
+        assert np.all(np.isinf(np.diag(c)))
+        assert np.all(np.isinf(c[3])) and np.all(np.isinf(c[:, 3]))
+        live = c[:3, :3]
+        np.testing.assert_allclose(live, live.T, rtol=1e-5)
+
+    def test_total_sse_monotone_under_merge(self):
+        """Merging can only increase total SSE (s(i,j) >= 0)."""
+        rng = np.random.default_rng(2)
+        x = rng.normal(size=(40, 3)).astype(np.float32)
+        assign = rng.integers(0, 4, 40).astype(np.int32)
+        st_ = make_stats(x, assign, 4)
+        before = float(total_sse(st_))
+        merged = merge_stats(st_, jnp.int32(0), jnp.int32(1))
+        after = float(total_sse(merged))
+        assert after >= before - 1e-3
+
+
+class TestPairwiseDists:
+    @given(st.integers(1, 20), st.integers(1, 20), st.integers(1, 6), st.integers(0, 2**31 - 1))
+    @settings(max_examples=20, deadline=None)
+    def test_matches_numpy(self, na, nb, d, seed):
+        rng = np.random.default_rng(seed)
+        a = rng.normal(size=(na, d)).astype(np.float32)
+        b = rng.normal(size=(nb, d)).astype(np.float32)
+        got = np.asarray(pairwise_sq_dists(jnp.asarray(a), jnp.asarray(b)))
+        want = ((a[:, None, :] - b[None, :, :]) ** 2).sum(-1)
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)

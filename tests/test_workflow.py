@@ -1,0 +1,158 @@
+"""Workflow engine (DAGMan analogue): ordering, faults/retries, rescue
+restart, straggler speculation, and the paper's Table 3 overhead model."""
+
+import pytest
+
+from repro.workflow.dag import DAG, Job
+from repro.workflow.engine import Engine
+from repro.workflow.faults import FaultInjector
+from repro.workflow.overhead import (
+    DAGMAN_PREP_S,
+    GridModel,
+    estimate_stages,
+    overhead_pct,
+)
+
+
+def diamond_dag(calls):
+    dag = DAG("diamond")
+    dag.job("a", lambda: calls.append("a") or 1)
+    dag.job("b", lambda a: calls.append("b") or a + 1, deps=["a"])
+    dag.job("c", lambda a: calls.append("c") or a + 2, deps=["a"])
+    dag.job("d", lambda b, c: calls.append("d") or b + c, deps=["b", "c"])
+    return dag
+
+
+class TestDAG:
+    def test_topological_execution(self):
+        calls = []
+        dag = diamond_dag(calls)
+        rep = Engine(model=GridModel(prep_latency_s=0, submit_latency_s=0)).run(dag)
+        assert calls[0] == "a" and calls[-1] == "d"
+        assert dag.jobs["d"].result == 5
+        assert rep.wall_s >= rep.max_stage_compute_s
+
+    def test_cycle_detection(self):
+        dag = DAG()
+        dag.job("a", lambda: 1)
+        dag.job("b", lambda a: 1, deps=["a"])
+        dag.jobs["a"].deps = ["b"]  # force a cycle
+        with pytest.raises(ValueError, match="cycle"):
+            dag.validate_acyclic()
+
+    def test_unknown_dep_rejected(self):
+        dag = DAG()
+        with pytest.raises(ValueError, match="unknown"):
+            dag.job("a", lambda: 1, deps=["nope"])
+
+
+class TestFaultTolerance:
+    def test_retry_recovers(self):
+        dag = DAG()
+        dag.job("flaky", lambda: 42, retries=2)
+        eng = Engine(
+            model=GridModel(prep_latency_s=0, submit_latency_s=0),
+            faults=FaultInjector(fail={"flaky": 2}),
+        )
+        rep = eng.run(dag)
+        assert dag.jobs["flaky"].result == 42
+        assert dag.jobs["flaky"].attempts == 3
+        assert rep.retries == 2
+
+    def test_retry_budget_exhausted(self):
+        dag = DAG()
+        dag.job("doomed", lambda: 1, retries=1)
+        eng = Engine(
+            model=GridModel(prep_latency_s=0, submit_latency_s=0),
+            faults=FaultInjector(fail={"doomed": 5}),
+        )
+        with pytest.raises(RuntimeError, match="exhausted"):
+            eng.run(dag)
+
+    def test_rescue_resume_skips_done_jobs(self, tmp_path):
+        """Crash after 'a' completes; the rescued run must NOT re-run 'a'
+        (DAGMan rescue-DAG semantics)."""
+        rescue = tmp_path / "rescue.json"
+        calls = []
+        dag1 = DAG()
+        dag1.job("a", lambda: calls.append("a1") or 1)
+        dag1.job("boom", lambda a: (_ for _ in ()).throw(RuntimeError("x")), deps=["a"], retries=0)
+        eng = Engine(model=GridModel(prep_latency_s=0, submit_latency_s=0), rescue_path=rescue)
+        with pytest.raises(Exception):
+            eng.run(dag1)
+        assert rescue.exists()
+
+        calls2 = []
+        dag2 = DAG()
+        dag2.job("a", lambda: calls2.append("a2") or 1)
+        dag2.job("boom", lambda a=None: 99, deps=["a"], retries=0)
+        eng2 = Engine(model=GridModel(prep_latency_s=0, submit_latency_s=0), rescue_path=rescue)
+        results = {"a": 1}  # rescued value re-injected by the driver
+        rep = eng2.run(dag2, results=results)
+        assert "a2" not in calls2, "completed job must not re-execute"
+        assert dag2.jobs["boom"].result == 99
+
+
+class TestStragglers:
+    def test_speculation_caps_stage_time(self):
+        import time as _t
+
+        dag = DAG()
+        for i in range(4):
+            dag.job(f"j{i}", lambda: 0)
+        dag.job("slow", lambda: _t.sleep(0.5))
+        eng = Engine(
+            model=GridModel(prep_latency_s=0, submit_latency_s=0), straggler_factor=3.0
+        )
+        rep = eng.run(dag)
+        assert rep.speculative >= 1
+        # stage wall uses the speculative (median) time, not the straggler
+        assert rep.wall_s < 0.5
+
+
+class TestOverheadModel:
+    def test_table2_asymmetry(self):
+        m = GridModel()
+        # Nancy->Orsay is the fastest WAN link in Table 2 (106.63 Mb/s)
+        fast = m.transfer_s(3, 0, 10**7)
+        slow = m.transfer_s(2, 1, 10**7)  # Rennes->Toulouse 12.71 Mb/s
+        assert fast < slow
+
+    def test_paper_prep_latency_default(self):
+        assert GridModel().prep_latency_s == DAGMAN_PREP_S == 295.0
+
+    def test_clustering_overhead_reproduces_table3_shape(self):
+        """Cheap parallel jobs (paper's clustering: est 19.52 s vs 1050 s
+        measured => 98% overhead).  With our simulated engine the prep
+        latency dominates exactly as in the paper."""
+        dag = DAG()
+        for i in range(8):
+            dag.job(f"cluster_{i}", lambda: sum(range(2000)), site=i % 5)
+        dag.job("merge", lambda *a: 0, deps=[f"cluster_{i}" for i in range(8)])
+        eng = Engine(model=GridModel())  # full 295 s prep
+        rep = eng.run(dag)
+        assert rep.overhead_pct() > 90.0
+
+    def test_overlap_prep_reduces_overhead(self):
+        """The paper suggests overheads are 'partly overlapped by
+        computations in the DAG' for heavier jobs — our overlapped mode
+        must strictly reduce wall time."""
+        def mk():
+            dag = DAG()
+            for i in range(8):
+                dag.job(f"c{i}", lambda: sum(range(2000)), site=i % 5)
+            return dag
+
+        base = Engine(model=GridModel()).run(mk())
+        fast = Engine(model=GridModel(), overlap_prep=True).run(mk())
+        assert fast.wall_s < base.wall_s * 0.2
+
+    def test_estimate_stages_matches_paper_structure(self):
+        m = GridModel()
+        stages = [
+            [(2.0, 10**6, 10**4, s) for s in range(5)],  # parallel local mining
+            [(0.5, 10**4, 0, 0)],  # aggregation
+        ]
+        est = estimate_stages(stages, m)
+        assert est > 2.5  # compute floor
+        assert overhead_pct(100.0, est) > 90
