@@ -23,6 +23,7 @@ def main() -> None:
         bench_gfm_vs_fdm,
         bench_kernels,
         bench_overheads,
+        bench_runtime,
         bench_scaling,
     )
 
@@ -32,6 +33,7 @@ def main() -> None:
         ("overheads (paper Table 3 / §5.2.2)", bench_overheads.run),
         ("scaling (grid dimension)", bench_scaling.run),
         ("kernels (hot-spot microbench)", bench_kernels.run),
+        ("runtime (end-to-end apps through GridRuntime)", bench_runtime.run),
     ]
 
     print("name,us_per_call,derived")

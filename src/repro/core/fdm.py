@@ -41,6 +41,17 @@ class FDMResult:
     per_level_candidates: list[int]
 
 
+def site_candidates(
+    level: int, db: TransactionDB, prev_global: list[Itemset], prev_local_i: set[Itemset]
+) -> list[Itemset]:
+    """FDM per-site candidate generation: GL(l-1) restricted to the sets
+    ALSO locally frequent at this site (local pruning), prefix-joined.
+    Level 1 seeds with every singleton."""
+    if level == 1:
+        return [(i,) for i in range(db.n_items)]
+    return apriori_join([its for its in prev_global if its in prev_local_i])
+
+
 def fdm_mine(
     sites: list[TransactionDB],
     k: int,
@@ -64,15 +75,9 @@ def fdm_mine(
         #    the sets ALSO locally frequent at this site (its local pruning;
         #    this is what shrinks per-site candidate sets vs plain Apriori
         #    but forces remote support requests later) --
-        if level == 1:
-            cands_by: list[list[Itemset]] = [
-                [(i,) for i in range(db.n_items)] for db in sites
-            ]
-        else:
-            cands_by = [
-                apriori_join([its for its in prev_global if its in prev_local[i]])
-                for i in range(s)
-            ]
+        cands_by: list[list[Itemset]] = [
+            site_candidates(level, sites[i], prev_global, prev_local[i]) for i in range(s)
+        ]
         union_cands = sorted(set().union(*map(set, cands_by)), key=lambda t: (len(t), t))
         per_level.append(len(union_cands))
         if not union_cands:
@@ -89,7 +94,8 @@ def fdm_mine(
             else:
                 sup = count_supports(db, cands_by[i], backend=backend)
             total_t += time.perf_counter() - t0
-            comm.count_calls += 1
+            if level == 1 or cands_by[i]:
+                comm.count_calls += 1  # only real device invocations
             cnt = {its: int(c) for its, c in zip(cands_by[i], np.asarray(sup))}
             local_counts.append(cnt)
             ann = {its for its in cands_by[i] if cnt[its] >= l_min[i]}
@@ -139,3 +145,176 @@ def fdm_mine(
         total_count_time=total_t,
         per_level_candidates=per_level,
     )
+
+
+# ---------------------------------------------------------------------------
+# SiteJob decomposition (level-synchronous FDM through the one scheduler)
+# ---------------------------------------------------------------------------
+
+
+def fdm_site_jobs(
+    sites: list[TransactionDB],
+    k: int,
+    minsup: float,
+    backend: str = "jnp",
+    measured: dict | None = None,
+) -> list:
+    """Decompose FDM into ``workflow.sitejob.SiteJob``s: per level l,
+    ``count_l_i`` (local counting) -> ``announce_l`` (locally-frequent
+    exchange) -> ``remote_l_i`` (remote support computation) ->
+    ``decide_l`` (global synchronization, one ledgered round).  All k
+    levels are laid out statically; levels past exhaustion no-op.  The
+    terminal ``collect`` job's result is an ``FDMResult`` equal to
+    ``fdm_mine``'s.  Shares one CommLog — run without fault injection.
+    """
+    from repro.workflow.sitejob import SiteJob, timed
+
+    s = len(sites)
+    n_total = sum(db.n_tx for db in sites)
+    g_min = int(np.ceil(minsup * n_total))
+    l_min = [int(np.ceil(minsup * db.n_tx)) for db in sites]
+    comm = CommLog()
+    per_level: list[int] = []
+    acc = {"remote": 0.0, "total": 0.0}
+    jobs: list[SiteJob] = []
+
+    def count_fn(level, i):
+        db = sites[i]
+
+        def fn(prev=None):
+            if level > 1 and (prev is None or not prev["global"]):
+                return None  # search exhausted at an earlier level
+            prev_global = prev["global"] if prev else []
+            prev_local_i = prev["local"][i] if prev else set()
+            cands = site_candidates(level, db, prev_global, prev_local_i)
+            t0 = time.perf_counter()
+            sup = item_supports(db) if level == 1 else count_supports(db, cands, backend=backend)
+            acc["total"] += time.perf_counter() - t0
+            if level == 1 or cands:
+                comm.count_calls += 1  # only real device invocations, as fdm_mine ledgers
+            cnt = {its: int(c) for its, c in zip(cands, np.asarray(sup))}
+            ann = {its for its in cands if cnt[its] >= l_min[i]}
+            return {"cnt": cnt, "ann": ann}
+
+        return fn
+
+    def announce_fn(level):
+        def fn(*outs):
+            if any(o is None for o in outs):
+                return None  # search exhausted (all-or-nothing per level)
+            union_cands = set()
+            announced = set()
+            payload = 0
+            for o in outs:
+                union_cands.update(o["cnt"].keys())
+                announced.update(o["ann"])
+                payload += len(o["ann"])
+            per_level.append(len(union_cands))
+            if not union_cands:
+                return None
+            return {
+                "announced": sorted(announced, key=lambda t: (len(t), t)),
+                "payload": payload,
+            }
+
+        return fn
+
+    def remote_fn(level, i):
+        db = sites[i]
+
+        def fn(cout, ann):
+            if cout is None or ann is None:
+                return None
+            remote = [its for its in ann["announced"] if its not in cout["cnt"]]
+            if remote:
+                t0 = time.perf_counter()
+                sup = count_supports(db, remote, backend=backend)
+                dt = time.perf_counter() - t0
+                acc["remote"] += dt
+                acc["total"] += dt
+                comm.count_calls += 1
+                for its, c in zip(remote, np.asarray(sup)):
+                    cout["cnt"][its] = int(c)
+            return {"cnt": cout["cnt"], "n_remote": len(remote)}
+
+        return fn
+
+    def decide_fn(level):
+        def fn(ann, *remotes):
+            if ann is None:
+                return None
+            # ann non-None implies every count (and hence remote) is live,
+            # so remotes[i] is site i's counts — positional, no filtering
+            comm.add_round(
+                ann["payload"] + sum(r["n_remote"] for r in remotes), _itemset_bytes(level), s
+            )
+            glob = []
+            for its in ann["announced"]:
+                c = sum(r["cnt"].get(its, 0) for r in remotes)
+                if c >= g_min:
+                    glob.append((its, c))
+            prev_global = [its for its, _ in glob]
+            prev_local = [
+                {its for its in prev_global if remotes[i]["cnt"].get(its, 0) >= l_min[i]}
+                for i in range(s)
+            ]
+            return {"global": prev_global, "local": prev_local, "frequent": dict(glob)}
+
+        return fn
+
+    for level in range(1, k + 1):
+        prev_dep = [f"decide_{level - 1}"] if level > 1 else []
+        for i in range(s):
+            jobs.append(
+                SiteJob(
+                    name=f"count_{level}_{i}",
+                    fn=timed(count_fn(level, i), measured, f"count_{level}_{i}"),
+                    deps=list(prev_dep),
+                    site=i,  # GridModel.transfer_s normalizes to its link matrix
+                )
+            )
+        jobs.append(
+            SiteJob(
+                name=f"announce_{level}",
+                fn=timed(announce_fn(level), measured, f"announce_{level}"),
+                deps=[f"count_{level}_{i}" for i in range(s)],
+            )
+        )
+        for i in range(s):
+            jobs.append(
+                SiteJob(
+                    name=f"remote_{level}_{i}",
+                    fn=timed(remote_fn(level, i), measured, f"remote_{level}_{i}"),
+                    deps=[f"count_{level}_{i}", f"announce_{level}"],
+                    site=i,  # GridModel.transfer_s normalizes to its link matrix
+                )
+            )
+        jobs.append(
+            SiteJob(
+                name=f"decide_{level}",
+                fn=timed(decide_fn(level), measured, f"decide_{level}"),
+                deps=[f"announce_{level}", *[f"remote_{level}_{i}" for i in range(s)]],
+            )
+        )
+
+    def collect_fn(*decisions):
+        frequent: dict[Itemset, int] = {}
+        for dec in decisions:
+            if dec is not None:
+                frequent.update(dec["frequent"])
+        return FDMResult(
+            frequent=frequent,
+            comm=comm,
+            remote_count_time=acc["remote"],
+            total_count_time=acc["total"],
+            per_level_candidates=per_level,
+        )
+
+    jobs.append(
+        SiteJob(
+            name="collect",
+            fn=timed(collect_fn, measured, "collect"),
+            deps=[f"decide_{level}" for level in range(1, k + 1)],
+        )
+    )
+    return jobs

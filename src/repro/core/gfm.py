@@ -74,6 +74,89 @@ def _itemset_bytes(k: int) -> int:
     return 4 * k + 4  # item ids (4B each) + count
 
 
+# ---------------------------------------------------------------------------
+# Protocol phases — shared by the in-process driver (gfm_mine) and the
+# SiteJob decomposition (gfm_site_jobs / runtime.GridRuntime)
+# ---------------------------------------------------------------------------
+
+
+def build_pool(local: list[LocalMineResult], k: int) -> tuple[list[Itemset], int]:
+    """Phase 2 pass 1: the union pool of locally frequent itemsets and the
+    exchanged payload size (itemset count announced across all sites)."""
+    pool: set[Itemset] = set()
+    payload = 0
+    for lm in local:
+        for lv in range(1, k + 1):
+            pool.update(lm.frequent[lv])
+            payload += len(lm.frequent[lv])
+    return sorted(pool, key=lambda t: (len(t), t)), payload
+
+
+def fill_missing(
+    db: TransactionDB, lm: LocalMineResult, pool: list[Itemset], backend: str = "jnp"
+) -> int:
+    """Phase 2 pass 2, one site's share: count the pool entries this site
+    had NOT already counted locally.  Mutates ``lm.counts`` (idempotent —
+    re-running counts nothing) and returns the number counted."""
+    missing = [its for its in pool if its not in lm.counts]
+    if missing:
+        sup = count_supports(db, missing, backend=backend)
+        for its, c in zip(missing, sup):
+            lm.counts[its] = int(c)
+    return len(missing)
+
+
+def aggregate_counts(pool: list[Itemset], local: list[LocalMineResult]) -> dict[Itemset, int]:
+    """Exact global counts once every site has filled its missing supports."""
+    return {its: sum(lm.counts[its] for lm in local) for its in pool}
+
+
+def topdown_search(
+    sites: list[TransactionDB],
+    local: list[LocalMineResult],
+    decided: dict[Itemset, tuple[int, bool]],
+    g_min: int,
+    comm: CommLog,
+    k: int,
+    backend: str,
+    pool_sizes: list[int],
+) -> None:
+    """Top-down descent over subsets of globally-failed itemsets.
+
+    Under uniform thresholds every candidate subset is already decided
+    (the 2-pass lemma) and this issues ZERO extra rounds; with non-uniform
+    thresholds it runs further counted rounds.  Mutates ``decided``,
+    ``comm`` and ``pool_sizes``.
+    """
+    frontier: set[Itemset] = set()
+    for its, (_, ok) in list(decided.items()):
+        if not ok:
+            for sub in subsets_of(its):
+                if len(sub) >= 1 and sub not in decided:
+                    frontier.add(sub)
+    while frontier:
+        batch = sorted(frontier, key=lambda t: (len(t), t))
+        pool_sizes.append(len(batch))
+        counts = np.zeros(len(batch), dtype=np.int64)
+        for db, lm in zip(sites, local):
+            missing = [its for its in batch if its not in lm.counts]
+            if missing:
+                sup = count_supports(db, missing, backend=backend)
+                comm.count_calls += 1
+                for its, c in zip(missing, sup):
+                    lm.counts[its] = int(c)
+            counts += np.array([lm.counts[its] for its in batch], dtype=np.int64)
+        comm.add_round(len(batch) * len(sites), _itemset_bytes(k), len(sites))
+        frontier = set()
+        for its, c in zip(batch, counts):
+            ok = int(c) >= g_min
+            decided[its] = (int(c), ok)
+            if not ok:
+                for sub in subsets_of(its):
+                    if len(sub) >= 1 and sub not in decided:
+                        frontier.add(sub)
+
+
 def gfm_mine(
     sites: list[TransactionDB],
     k: int,
@@ -101,64 +184,28 @@ def gfm_mine(
         local.append(lm)
 
     # ---- Phase 2 pass 1: exchange locally frequent itemsets + counts ----
-    pool: set[Itemset] = set()
-    for lm in local:
-        for lv in range(1, k + 1):
-            pool.update(lm.frequent[lv])
-    pool_sorted = sorted(pool, key=lambda t: (len(t), t))
-    payload = sum(len(lm.frequent[lv]) for lm in local for lv in range(1, k + 1))
+    pool_sorted, payload = build_pool(local, k)
     comm.add_round(payload, _itemset_bytes(k), s)
     pool_sizes = [len(pool_sorted)]
 
     # ---- Phase 2 pass 2: fill in missing remote supports ----
-    global_counts: dict[Itemset, int] = {its: 0 for its in pool_sorted}
     reply_payload = 0
-    for i, (db, lm) in enumerate(zip(sites, local)):
-        missing = [its for its in pool_sorted if its not in lm.counts]
-        if missing:
-            sup = count_supports(db, missing, backend=backend)
+    for db, lm in zip(sites, local):
+        n_missing = fill_missing(db, lm, pool_sorted, backend=backend)
+        if n_missing:
             comm.count_calls += 1
-            for its, c in zip(missing, sup):
-                lm.counts[its] = int(c)
-            reply_payload += len(missing)
-        for its in pool_sorted:
-            global_counts[its] += lm.counts[its]
+        reply_payload += n_missing
     comm.add_round(reply_payload, _itemset_bytes(k), s)
 
+    global_counts = aggregate_counts(pool_sorted, local)
     decided: dict[Itemset, tuple[int, bool]] = {
         its: (c, c >= g_min) for its, c in global_counts.items()
     }
 
     # ---- Top-down search over subsets of failures ----
     # Under uniform thresholds every globally frequent subset is already in
-    # the pool (lemma), so `frontier` stays empty and no further rounds run.
-    frontier: set[Itemset] = set()
-    for its, (_, ok) in list(decided.items()):
-        if not ok:
-            for sub in subsets_of(its):
-                if len(sub) >= 1 and sub not in decided:
-                    frontier.add(sub)
-    while frontier:
-        batch = sorted(frontier, key=lambda t: (len(t), t))
-        pool_sizes.append(len(batch))
-        counts = np.zeros(len(batch), dtype=np.int64)
-        for db, lm in zip(sites, local):
-            missing = [its for its in batch if its not in lm.counts]
-            if missing:
-                sup = count_supports(db, missing, backend=backend)
-                comm.count_calls += 1
-                for its, c in zip(missing, sup):
-                    lm.counts[its] = int(c)
-            counts += np.array([lm.counts[its] for its in batch], dtype=np.int64)
-        comm.add_round(len(batch) * s, _itemset_bytes(k), s)
-        frontier = set()
-        for its, c in zip(batch, counts):
-            ok = int(c) >= g_min
-            decided[its] = (int(c), ok)
-            if not ok:
-                for sub in subsets_of(its):
-                    if len(sub) >= 1 and sub not in decided:
-                        frontier.add(sub)
+    # the pool (lemma), so the descent adds no further rounds.
+    topdown_search(sites, local, decided, g_min, comm, k, backend, pool_sizes)
 
     frequent = {its: c for its, (c, ok) in decided.items() if ok}
     return GFMResult(
@@ -168,3 +215,114 @@ def gfm_mine(
         pool_sizes=pool_sizes,
         n_total_tx=n_total,
     )
+
+
+# ---------------------------------------------------------------------------
+# SiteJob decomposition (the grid-workflow view of Algorithm 2)
+# ---------------------------------------------------------------------------
+
+
+def gfm_site_jobs(
+    sites: list[TransactionDB],
+    k: int,
+    minsup: float,
+    backend: str = "jnp",
+    local_minsup: float | None = None,
+    measured: dict | None = None,
+) -> list:
+    """Decompose the GFM protocol into ``workflow.sitejob.SiteJob``s.
+
+    ``apriori_i`` are the fully-local phase-1 jobs (Pallas support counting
+    when ``backend="kernel"``); ``pool`` and ``decide`` bracket the single
+    two-pass synchronization, with the ``recount_i`` jobs doing each site's
+    missing-support counting in between.  The terminal ``decide`` job's
+    result is a ``GFMResult`` with the same CommLog semantics as
+    ``gfm_mine`` — exactly 2 rounds under uniform thresholds.
+
+    The jobs share one CommLog, so run them without fault injection
+    (a retried ``pool`` would ledger its round twice).
+    """
+    from repro.workflow.sitejob import SiteJob, timed
+
+    s = len(sites)
+    n_total = sum(db.n_tx for db in sites)
+    g_min = int(np.ceil(minsup * n_total))
+    l_ratio = minsup if local_minsup is None else local_minsup
+    comm = CommLog()
+    pool_sizes: list[int] = []
+    jobs: list[SiteJob] = []
+
+    def apriori_fn(i):
+        db = sites[i]
+
+        def fn():
+            return local_apriori(db, k, int(np.ceil(l_ratio * db.n_tx)), backend=backend)
+
+        return fn
+
+    for i in range(s):
+        jobs.append(
+            SiteJob(
+                name=f"apriori_{i}",
+                fn=timed(apriori_fn(i), measured, f"apriori_{i}"),
+                site=i,  # GridModel.transfer_s normalizes to its link matrix
+                input_bytes=int(np.asarray(sites[i].packed).nbytes),
+            )
+        )
+
+    def pool_fn(*local):
+        for lm in local:
+            comm.count_calls += lm.count_calls
+        pool, payload = build_pool(list(local), k)
+        comm.add_round(payload, _itemset_bytes(k), s)
+        pool_sizes.append(len(pool))
+        return pool
+
+    jobs.append(
+        SiteJob(
+            name="pool",
+            fn=timed(pool_fn, measured, "pool"),
+            deps=[f"apriori_{i}" for i in range(s)],
+        )
+    )
+
+    def recount_fn(i):
+        db = sites[i]
+
+        def fn(lm, pool):
+            n_missing = fill_missing(db, lm, pool, backend=backend)
+            if n_missing:
+                comm.count_calls += 1
+            return lm, n_missing
+
+        return fn
+
+    for i in range(s):
+        jobs.append(
+            SiteJob(
+                name=f"recount_{i}",
+                fn=timed(recount_fn(i), measured, f"recount_{i}"),
+                deps=[f"apriori_{i}", "pool"],
+                site=i,  # GridModel.transfer_s normalizes to its link matrix
+            )
+        )
+
+    def decide_fn(pool, *recounts):
+        local = [lm for lm, _ in recounts]
+        comm.add_round(sum(nm for _, nm in recounts), _itemset_bytes(k), s)
+        counts = aggregate_counts(pool, local)
+        decided = {its: (c, c >= g_min) for its, c in counts.items()}
+        topdown_search(sites, local, decided, g_min, comm, k, backend, pool_sizes)
+        frequent = {its: c for its, (c, ok) in decided.items() if ok}
+        return GFMResult(
+            frequent=frequent, comm=comm, local=local, pool_sizes=pool_sizes, n_total_tx=n_total
+        )
+
+    jobs.append(
+        SiteJob(
+            name="decide",
+            fn=timed(decide_fn, measured, "decide"),
+            deps=["pool", *[f"recount_{i}" for i in range(s)]],
+        )
+    )
+    return jobs

@@ -33,6 +33,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core.kmeans import kmeans
 from repro.core.stats import (
     SuffStats,
@@ -125,6 +126,16 @@ def merge_subclusters(
 def paper_threshold(stats: SuffStats, factor: float) -> jax.Array:
     """tau = factor * max individual sub-cluster SSE (paper's setting)."""
     return factor * jnp.max(jnp.where(stats.sizes > 0, stats.sse, -jnp.inf))
+
+
+def merge_gathered(per_site: SuffStats, cfg: VClusterConfig) -> MergeResult:
+    """Logical merge over gathered per-site stats (s, k, ...) — the single
+    deterministic computation every site runs redundantly after the one
+    all_gather.  Shared by the pooled driver, the shard_map driver, and the
+    runtime's sync job."""
+    flat = stack_site_stats(per_site)
+    tau = paper_threshold(flat, cfg.threshold_factor)
+    return merge_subclusters(flat, tau, criterion=cfg.criterion)
 
 
 # ---------------------------------------------------------------------------
@@ -235,9 +246,7 @@ def vcluster_pooled(key: jax.Array, xs: jax.Array, cfg: VClusterConfig = VCluste
     s, n, d = xs.shape
     keys = jax.random.split(key, s)
     assigns, per_site = jax.vmap(lambda k, x: _site_local(k, x, cfg))(keys, xs)
-    flat = stack_site_stats(per_site)  # M = s * k slots
-    tau = paper_threshold(flat, cfg.threshold_factor)
-    merged = merge_subclusters(flat, tau, criterion=cfg.criterion)
+    merged = merge_gathered(per_site, cfg)
 
     k = cfg.k_local
     offsets = (jnp.arange(s, dtype=jnp.int32) * k)[:, None]
@@ -269,15 +278,13 @@ def vcluster_shard_map(mesh, axis: str, cfg: VClusterConfig = VClusterConfig()):
         key = keys[0]
         assign, st = _site_local(key, x, cfg)
         gathered = jax.lax.all_gather(st, axis)  # (s, k, ...) tiny
-        flat = stack_site_stats(gathered)
-        tau = paper_threshold(flat, cfg.threshold_factor)
-        merged = merge_subclusters(flat, tau, criterion=cfg.criterion)
+        merged = merge_gathered(gathered, cfg)
         site_idx = jax.lax.axis_index(axis)
         slots = assign + site_idx.astype(jnp.int32) * k
         labels, _ = perturb_site(x, slots, merged, cfg.border_candidates)
         return labels, merged
 
-    fn = jax.shard_map(
+    fn = shard_map(
         body,
         mesh=mesh,
         in_specs=(P(axis), P(axis)),
@@ -285,3 +292,115 @@ def vcluster_shard_map(mesh, axis: str, cfg: VClusterConfig = VClusterConfig()):
         check_vma=False,
     )
     return fn
+
+
+# ---------------------------------------------------------------------------
+# SiteJob decomposition (the grid-workflow view of Algorithm 1)
+# ---------------------------------------------------------------------------
+
+
+def vcluster_site_jobs(
+    key: jax.Array,
+    xs: jax.Array,
+    cfg: VClusterConfig = VClusterConfig(),
+    *,
+    sync=None,
+    measured: dict | None = None,
+) -> list:
+    """Decompose Algorithm 1 into ``workflow.sitejob.SiteJob``s.
+
+    Stage 1: per-site K-Means sub-clustering (``cluster_i``; the Pallas
+    assignment kernel when ``cfg.use_kernel``).  Stage 2: the single
+    synchronization (``merge``) — ``sync(per_site_stats) -> MergeResult``
+    is injected by the runtime (shard_map all_gather on a device mesh, or
+    the default in-process pooled merge).  Stage 3: per-site border
+    perturbation (``perturb_i``, zero communication).  The terminal
+    ``collect`` job's result is a ``VClusterResult``.
+
+    All jobs return TimedResults, so the engine's grid clock is advanced by
+    real measured kernel time; ``measured`` (if given) receives the same
+    numbers for cross-checking the engine's ledger.
+    """
+    from repro.workflow.sitejob import SiteJob, timed
+
+    xs = jnp.asarray(xs)
+    s, n, d = xs.shape
+    k = cfg.k_local
+    keys = jax.random.split(key, s)
+    stats_nbytes = k * (d + 2) * 4  # (N, center, SSE) triples, f32
+    if sync is None:
+        sync = functools.partial(merge_gathered, cfg=cfg)
+    jobs: list[SiteJob] = []
+
+    def cluster_fn(i):
+        def fn():
+            return _site_local(keys[i], xs[i], cfg)
+
+        return fn
+
+    for i in range(s):
+        jobs.append(
+            SiteJob(
+                name=f"cluster_{i}",
+                fn=timed(cluster_fn(i), measured, f"cluster_{i}"),
+                site=i,  # GridModel.transfer_s normalizes to its link matrix
+                input_bytes=int(xs[i].nbytes),
+                output_bytes=stats_nbytes,
+            )
+        )
+
+    def merge_fn(*site_out):
+        per_site = SuffStats(
+            sizes=jnp.stack([st.sizes for _, st in site_out]),
+            centers=jnp.stack([st.centers for _, st in site_out]),
+            sse=jnp.stack([st.sse for _, st in site_out]),
+        )
+        return sync(per_site)
+
+    jobs.append(
+        SiteJob(
+            name="merge",
+            fn=timed(merge_fn, measured, "merge"),
+            deps=[f"cluster_{i}" for i in range(s)],
+            input_bytes=s * stats_nbytes,  # the all_gather payload
+        )
+    )
+
+    def perturb_fn(i):
+        def fn(site_out, merged):
+            assign, _ = site_out
+            slots = assign + jnp.int32(i * k)
+            labels, _ = perturb_site(xs[i], slots, merged, cfg.border_candidates)
+            return labels
+
+        return fn
+
+    for i in range(s):
+        jobs.append(
+            SiteJob(
+                name=f"perturb_{i}",
+                fn=timed(perturb_fn(i), measured, f"perturb_{i}"),
+                deps=[f"cluster_{i}", "merge"],
+                site=i,  # GridModel.transfer_s normalizes to its link matrix
+            )
+        )
+
+    def collect_fn(merged, *rest):
+        labels = jnp.stack(list(rest[:s]))
+        site_out = rest[s:]
+        per_site = SuffStats(
+            sizes=jnp.stack([st.sizes for _, st in site_out]),
+            centers=jnp.stack([st.centers for _, st in site_out]),
+            sse=jnp.stack([st.sse for _, st in site_out]),
+        )
+        comm = jnp.asarray(s * stats_nbytes, jnp.int32)
+        return VClusterResult(labels=labels, merged=merged, site_stats=per_site, comm_bytes=comm)
+
+    jobs.append(
+        SiteJob(
+            name="collect",
+            fn=timed(collect_fn, measured, "collect"),
+            deps=["merge", *[f"perturb_{i}" for i in range(s)], *[f"cluster_{i}" for i in range(s)]],
+        )
+    )
+    return jobs

@@ -24,6 +24,7 @@ from pathlib import Path
 import jax
 
 import repro.configs as configs
+from repro.compat import cost_analysis_dict
 from repro.configs.shapes import SHAPES, cell_is_supported, input_specs, skip_reason
 from repro.launch.mesh import HW, make_production_mesh
 from repro.models import transformer as T
@@ -178,7 +179,7 @@ def _run_cell_once(arch, shape_name, multi_pod, rules_name, gridlocal, grad_accu
     t_compile = time.time() - t0
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis() or {}
+    cost = cost_analysis_dict(compiled)
     t0 = time.time()
     hlo = compiled.as_text()
     costs = analyze_hlo(hlo, chips_per_pod=256)  # trip-count-aware per-device costs

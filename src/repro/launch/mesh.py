@@ -42,6 +42,17 @@ def make_variant_mesh(name: str, *, multi_pod: bool = False):
     raise KeyError(name)
 
 
+def make_site_mesh(n_sites: int, axis: str = "sites"):
+    """1-D grid-site mesh for the mining runtime (one device per paper
+    "site"), or None when the host exposes fewer devices than sites —
+    callers fall back to the pooled vmap path.  Multi-device CPU tests get
+    their devices from xla_force_host_platform_device_count."""
+    devs = jax.devices()
+    if n_sites < 1 or len(devs) < n_sites:
+        return None
+    return jax.make_mesh((n_sites,), (axis,), devices=devs[:n_sites])
+
+
 def make_test_mesh(n_data: int = 2, n_model: int = 2, n_pods: int = 0):
     """Small mesh for multi-device CPU tests (subprocesses set
     xla_force_host_platform_device_count accordingly)."""

@@ -135,12 +135,17 @@ def reduced(cfg: ModelConfig) -> ModelConfig:
         n_layers = max(n_layers, 2 * cfg.shared_attn_every)
     moe = None
     if cfg.moe:
+        ne = min(cfg.moe.n_experts, 4)
+        tk = min(cfg.moe.top_k, 2)
         moe = MoEConfig(
-            n_experts=min(cfg.moe.n_experts, 4),
+            n_experts=ne,
             n_shared_experts=min(cfg.moe.n_shared_experts, 1),
-            top_k=min(cfg.moe.top_k, 2),
+            top_k=tk,
             expert_d_ff=64,
-            capacity_factor=cfg.moe.capacity_factor,
+            # worst-case capacity (cap == T): smoke-scale routers are
+            # untrained and heavily skewed, and capacity drops would break
+            # prefill/decode parity (decode never competes for capacity)
+            capacity_factor=max(cfg.moe.capacity_factor, ne / max(tk, 1)),
         )
     ssm = None
     if cfg.ssm:

@@ -1,0 +1,12 @@
+"""Multi-device grid-mining runtime.
+
+Bridges the repo's two halves: the paper-faithful mining algorithms
+(``repro.core``) and the DAGMan-analog grid workflow model
+(``repro.workflow``).  ``GridRuntime`` executes both applications
+end-to-end through ``workflow.engine.Engine`` on a real JAX device mesh,
+with measured kernel time calibrating the simulated grid clock.
+"""
+
+from repro.runtime.gridruntime import GridRuntime, RuntimeRun
+
+__all__ = ["GridRuntime", "RuntimeRun"]

@@ -210,8 +210,10 @@ def constrain(x: jax.Array, logical_axes: Sequence[str | None]) -> jax.Array:
     if not _ACTIVE:
         return x
     mesh, rules = _ACTIVE[-1]
+    from repro.compat import get_abstract_mesh
+
     pspec = logical_to_pspec(logical_axes, x.shape, rules, mesh)
-    am = jax.sharding.get_abstract_mesh()
+    am = get_abstract_mesh()
     if am is not None and am.shape:
         manual = {
             name

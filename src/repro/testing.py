@@ -1,0 +1,80 @@
+"""Deterministic fallback for the slice of the hypothesis API the test
+suite uses (``given``/``settings``/``strategies.{integers,floats,booleans,
+sampled_from}``).
+
+The real ``hypothesis`` (declared in the ``[test]`` extra and installed in
+CI) is always preferred — tests import it and fall back here only on
+ImportError, so hermetic containers without network access can still run
+the full tier-1 suite.  The fallback draws ``max_examples`` pseudo-random
+examples from a seed fixed per test (reproducible across runs and
+machines); there is no shrinking and no example database.
+"""
+
+from __future__ import annotations
+
+import functools
+import random
+from typing import Any, Callable
+
+
+class _Strategy:
+    """A draw function over a ``random.Random``; mirrors hypothesis's
+    SearchStrategy only as far as the shim needs."""
+
+    def __init__(self, draw: Callable[[random.Random], Any]):
+        self._draw = draw
+
+    def example_from(self, rng: random.Random) -> Any:
+        return self._draw(rng)
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value: float, max_value: float) -> _Strategy:
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    @staticmethod
+    def booleans() -> _Strategy:
+        return _Strategy(lambda rng: rng.random() < 0.5)
+
+    @staticmethod
+    def sampled_from(elements) -> _Strategy:
+        pool = list(elements)
+        return _Strategy(lambda rng: pool[rng.randrange(len(pool))])
+
+
+def settings(max_examples: int = 100, deadline=None, **_ignored):
+    """Records ``max_examples`` for ``given``; other knobs are no-ops."""
+
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*arg_strategies: _Strategy, **kw_strategies: _Strategy):
+    """Run the test once per drawn example (seeded by the test's qualname,
+    so failures reproduce).  Works above or below ``settings``."""
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_fallback_max_examples", None) or getattr(
+                fn, "_fallback_max_examples", 25
+            )
+            rng = random.Random(f"{fn.__module__}.{fn.__qualname__}")
+            for _ in range(n):
+                drawn = tuple(s.example_from(rng) for s in arg_strategies)
+                drawn_kw = {k: s.example_from(rng) for k, s in kw_strategies.items()}
+                fn(*args, *drawn, **kwargs, **drawn_kw)
+
+        # pytest must not see the strategy parameters as fixtures
+        del wrapper.__wrapped__
+        return wrapper
+
+    return deco

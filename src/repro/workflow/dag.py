@@ -9,7 +9,22 @@ semantics.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Callable
+from typing import Any, Callable, NamedTuple
+
+
+class TimedResult(NamedTuple):
+    """A job result carrying its own device-measured compute time.
+
+    When a job's ``fn`` returns one of these, the engine advances the
+    simulated grid clock by ``compute_s`` (the caller's measurement — e.g.
+    wall time around ``jax.block_until_ready``) instead of its own
+    perf_counter bracket, and dependents receive the unwrapped ``value``.
+    This is how the runtime layer calibrates the paper's overhead model
+    with real kernel timings.
+    """
+
+    value: Any
+    compute_s: float
 
 
 @dataclass

@@ -27,7 +27,7 @@ import time
 from dataclasses import dataclass, field
 from pathlib import Path
 
-from repro.workflow.dag import DAG, Job
+from repro.workflow.dag import DAG, Job, TimedResult
 from repro.workflow.faults import FaultInjector
 from repro.workflow.overhead import GridModel
 
@@ -78,6 +78,16 @@ class Engine:
             self.rescue_path.write_text(json.dumps(sorted(done)))
 
     # -- execution ------------------------------------------------------------
+
+    def run_site_jobs(self, site_jobs, name: str = "site-jobs") -> tuple[RunReport, dict]:
+        """Execute a list of ``workflow.sitejob.SiteJob`` through the grid
+        model — the one scheduler shared by clustering and itemset mining.
+        Returns (report, results-by-job-name)."""
+        from repro.workflow.sitejob import build_dag
+
+        results: dict = {}
+        rep = self.run(build_dag(site_jobs, name), results=results)
+        return rep, results
 
     def run(self, dag: DAG, results: dict | None = None) -> RunReport:
         dag.validate_acyclic()
@@ -158,8 +168,16 @@ class Engine:
                 continue  # DAGMan retry
             t0 = time.perf_counter()
             args = [results[d] for d in job.deps]
-            job.result = job.fn(*args)
-            dt = time.perf_counter() - t0 + job.sim_compute_s
+            raw = job.fn(*args)
+            if isinstance(raw, TimedResult):
+                # the job measured its own device compute (SiteJob.timed);
+                # the grid clock is calibrated by real kernels, not by our
+                # host-side bracket around fn()
+                job.result = raw.value
+                dt = raw.compute_s + job.sim_compute_s
+            else:
+                job.result = raw
+                dt = time.perf_counter() - t0 + job.sim_compute_s
             results[job.name] = job.result
             job.status = "done"
             rep.compute_s += dt

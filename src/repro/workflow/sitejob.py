@@ -1,0 +1,84 @@
+"""SiteJob — the shared unit of site-local mining work.
+
+Both of the paper's applications (variance-based clustering and GFM/FDM
+itemset mining) decompose into the same shape: a stage of per-site compute
+jobs, a synchronization job over their outputs, and optionally more
+per-site work.  ``SiteJob`` is that contract: the core algorithm modules
+(`core.vclustering`, `core.gfm`, `core.fdm`) emit lists of SiteJobs, and
+one scheduler — ``workflow.engine.Engine`` — executes any of them through
+the same DAGMan-analog grid model.
+
+``timed`` wraps a site job's callable so the engine's simulated clock is
+fed the *measured* device compute time (blocking on all jax outputs)
+rather than a host-side bracket that would include tracing overhead noise.
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+
+from repro.workflow.dag import DAG, Job, TimedResult
+
+
+@dataclass
+class SiteJob:
+    """One unit of site-local (or synchronization) work.
+
+    ``fn`` receives the results of ``deps`` in order and does the real
+    compute; ``site`` indexes into the grid model's link matrix for the
+    staging-cost simulation; byte counts size the staged transfers.
+    """
+
+    name: str
+    fn: Callable[..., Any]
+    deps: list[str] = field(default_factory=list)
+    site: int = 0
+    input_bytes: int = 0
+    output_bytes: int = 0
+    retries: int = 2
+
+    def to_job(self) -> Job:
+        return Job(
+            name=self.name,
+            fn=self.fn,
+            deps=list(self.deps),
+            site=self.site,
+            input_bytes=self.input_bytes,
+            output_bytes=self.output_bytes,
+            retries=self.retries,
+        )
+
+
+def timed(fn: Callable[..., Any], record: dict[str, float] | None = None, name: str = "") -> Callable[..., Any]:
+    """Wrap ``fn`` to return a TimedResult with device-measured compute.
+
+    Blocks until every jax array in the output is ready, so asynchronous
+    dispatch cannot hide compute from the clock.  When ``record`` is given
+    the measurement is also stored under ``name`` — the runtime uses this
+    to cross-check the engine's ledger.
+    """
+
+    @functools.wraps(fn)
+    def wrapper(*args):
+        t0 = time.perf_counter()
+        out = jax.block_until_ready(fn(*args))
+        dt = time.perf_counter() - t0
+        if record is not None:
+            record[name or getattr(fn, "__name__", "job")] = dt
+        return TimedResult(out, dt)
+
+    return wrapper
+
+
+def build_dag(site_jobs: list[SiteJob], name: str = "site-jobs") -> DAG:
+    """Assemble SiteJobs into an executable DAG (insertion order must be
+    topological, as with ``DAG.add``)."""
+    dag = DAG(name)
+    for sj in site_jobs:
+        dag.add(sj.to_job())
+    return dag

@@ -7,6 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.compat import cost_analysis_dict
 from repro.roofline.analyze import roofline_terms
 from repro.roofline.hlo_costs import analyze_hlo, _parse_replica_groups
 
@@ -22,7 +23,7 @@ class TestDotFlops:
         w = jax.ShapeDtypeStruct((128, 32), jnp.float32)
         c, txt = compile_text(lambda a, b: a @ b, x, w)
         res = analyze_hlo(txt)
-        assert res.flops == pytest.approx(c.cost_analysis()["flops"], rel=0.01)
+        assert res.flops == pytest.approx(cost_analysis_dict(c)["flops"], rel=0.01)
         assert res.flops == pytest.approx(2 * 64 * 128 * 32)
 
     def test_scan_multiplies_by_trip_count(self):

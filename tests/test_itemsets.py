@@ -3,7 +3,10 @@ counts (the paper's 2-vs-k claim), and communication accounting."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # hermetic env: deterministic shim, no shrinking
+    from repro.testing import given, settings, strategies as st
 
 from repro.core.apriori import (
     TransactionDB,

@@ -1,0 +1,230 @@
+"""GridRuntime: real site-local compute scheduled through the grid
+workflow engine — pooled/shard_map equivalence, measured-time feedback
+into the simulated clock, and the paper's 2-round GFM claim end-to-end."""
+
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.apriori import TransactionDB
+from repro.core.fdm import fdm_mine
+from repro.core.gfm import gfm_mine
+from repro.core.vclustering import VClusterConfig, vcluster_pooled
+from repro.data.synthetic import (
+    gaussian_mixture,
+    ibm_transactions,
+    split_sites,
+    split_transactions,
+)
+from repro.runtime import GridRuntime
+from repro.workflow.engine import Engine
+from repro.workflow.overhead import GridModel
+
+
+def fast_engine():
+    return Engine(model=GridModel(prep_latency_s=0, submit_latency_s=0))
+
+
+def cluster_sites(n_sites=4, n=2000):
+    pts, _ = gaussian_mixture(0, n, 2, 4, spread=12.0, sigma=0.5)
+    return split_sites(pts, n_sites, seed=1)
+
+
+def tx_sites(n_sites=4, n_tx=1000, n_items=30):
+    dense = ibm_transactions(seed=2, n_tx=n_tx, n_items=n_items, avg_tx_len=6, n_patterns=8)
+    return dense, [TransactionDB.from_dense(s) for s in split_transactions(dense, n_sites, seed=0)]
+
+
+CFG = VClusterConfig(k_local=6, kmeans_iters=15, border_candidates=4)
+
+
+class TestVClusteringRuntime:
+    def test_matches_pooled_reference_driver(self):
+        """The job-decomposed pipeline reproduces the one-process driver
+        exactly (same per-site kmeans, same logical merge, same perturb)."""
+        xs = cluster_sites()
+        rt = GridRuntime(engine=fast_engine(), sync="pooled", use_kernel=False)
+        run = rt.run_vclustering(jax.random.PRNGKey(0), xs, CFG)
+        ref = vcluster_pooled(jax.random.PRNGKey(0), jnp.asarray(xs), CFG)
+        assert int(run.result.merged.n_global) == int(ref.merged.n_global)
+        assert np.array_equal(np.asarray(run.result.merged.labels), np.asarray(ref.merged.labels))
+        assert np.array_equal(np.asarray(run.result.labels), np.asarray(ref.labels))
+
+    def test_engine_clock_uses_measured_compute(self):
+        """(b) The engine's reported compute_s is exactly the sum of the
+        runtime's device-measured job times — the TimedResult feedback, not
+        the engine's own host-side bracket."""
+        xs = cluster_sites()
+        rt = GridRuntime(engine=fast_engine(), sync="pooled", use_kernel=False)
+        run = rt.run_vclustering(jax.random.PRNGKey(0), xs, CFG)
+        jt = run.report.job_times
+        assert set(jt) == set(run.measured)
+        for name, t in run.measured.items():
+            assert jt[name] == pytest.approx(t, abs=0), name  # bit-identical feedthrough
+            assert t > 0.0
+        assert run.report.compute_s == pytest.approx(sum(jt.values()), rel=1e-12)
+        # the simulated grid wall includes the measured compute
+        assert run.report.wall_s >= max(jt.values())
+
+    def test_kernel_path_runs_through_engine(self):
+        """Pallas assignment kernel (interpret mode on CPU) end-to-end."""
+        xs = cluster_sites(n=800)
+        rt = GridRuntime(engine=fast_engine(), sync="pooled", use_kernel=True)
+        run = rt.run_vclustering(jax.random.PRNGKey(0), xs)
+        assert int(run.result.merged.n_global) >= 1
+        assert run.result.labels.shape == (4, 200)
+
+    def test_shard_map_requires_mesh(self):
+        xs = cluster_sites()
+        rt = GridRuntime(engine=fast_engine(), sync="shard_map", use_kernel=False)
+        if len(jax.devices()) >= 4:
+            pytest.skip("host has enough devices; requirement satisfied")
+        with pytest.raises(RuntimeError, match="shard_map sync requires"):
+            rt.run_vclustering(jax.random.PRNGKey(0), xs, CFG)
+
+
+RUNTIME_EQUIV = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import sys
+sys.path.insert(0, "SRC")
+import jax, numpy as np
+from repro.core.vclustering import VClusterConfig
+from repro.data.synthetic import gaussian_mixture, split_sites
+from repro.runtime import GridRuntime
+from repro.workflow.engine import Engine
+from repro.workflow.overhead import GridModel
+
+pts, _ = gaussian_mixture(0, 2000, 2, 4, spread=12.0, sigma=0.5)
+xs = split_sites(pts, 4, seed=1)
+cfg = VClusterConfig(k_local=6, kmeans_iters=15, border_candidates=4)
+eng = lambda: Engine(model=GridModel(prep_latency_s=0, submit_latency_s=0))
+
+pool = GridRuntime(engine=eng(), sync="pooled", use_kernel=False)
+shard = GridRuntime(engine=eng(), sync="shard_map", use_kernel=False)
+rp = pool.run_vclustering(jax.random.PRNGKey(0), xs, cfg)
+rs = shard.run_vclustering(jax.random.PRNGKey(0), xs, cfg)
+assert rs.sync_mode == "shard_map", rs.sync_mode
+assert rp.sync_mode == "pooled", rp.sync_mode
+# (a) identical merge labelings and point labels, bit for bit
+assert np.array_equal(np.asarray(rp.result.merged.labels), np.asarray(rs.result.merged.labels))
+assert np.array_equal(np.asarray(rp.result.labels), np.asarray(rs.result.labels))
+assert int(rp.result.merged.n_global) == int(rs.result.merged.n_global)
+print("RUNTIME_EQUIV_OK")
+"""
+
+
+class TestShardMapSync:
+    def test_pooled_and_shard_map_agree_bit_for_bit(self):
+        """(a) The distributed all_gather sync and the pooled fallback give
+        identical merge labelings (4 host devices in a subprocess)."""
+        src = os.path.join(os.path.dirname(__file__), "..", "src")
+        script = RUNTIME_EQUIV.replace("SRC", os.path.abspath(src))
+        p = subprocess.run(
+            [sys.executable, "-c", script], capture_output=True, text=True, timeout=600,
+            env={**os.environ, "JAX_PLATFORMS": "cpu"},
+        )
+        assert "RUNTIME_EQUIV_OK" in p.stdout, p.stdout + p.stderr
+
+
+class TestGFMRuntime:
+    def test_two_rounds_under_uniform_thresholds(self):
+        """(c) GFM through the runtime synchronizes exactly twice when
+        local == global thresholds (the paper's 2-vs-k headline)."""
+        _, sites = tx_sites()
+        rt = GridRuntime(engine=fast_engine(), count_backend="jnp")
+        run = rt.run_gfm(sites, 3, 0.08)
+        assert run.result.comm.rounds == 2
+
+    def test_matches_gfm_mine(self):
+        _, sites = tx_sites()
+        rt = GridRuntime(engine=fast_engine(), count_backend="jnp")
+        run = rt.run_gfm(sites, 3, 0.08)
+        _, sites2 = tx_sites()
+        ref = gfm_mine(sites2, 3, 0.08)
+        assert run.result.frequent == ref.frequent
+        assert run.result.comm.rounds == ref.comm.rounds
+        assert run.result.comm.bytes_sent == ref.comm.bytes_sent
+
+    def test_nonuniform_thresholds_issue_extra_rounds(self):
+        """With looser local thresholds the 2-pass lemma breaks and the
+        top-down descent must ledger additional rounds — same behaviour as
+        the in-process driver."""
+        _, sites = tx_sites()
+        rt = GridRuntime(engine=fast_engine(), count_backend="jnp")
+        run = rt.run_gfm(sites, 3, 0.08, local_minsup=0.30)
+        _, sites2 = tx_sites()
+        ref = gfm_mine(sites2, 3, 0.08, local_minsup=0.30)
+        assert run.result.comm.rounds == ref.comm.rounds >= 2
+        assert run.result.frequent == ref.frequent
+
+    def test_engine_clock_uses_measured_compute(self):
+        _, sites = tx_sites()
+        rt = GridRuntime(engine=fast_engine(), count_backend="jnp")
+        run = rt.run_gfm(sites, 3, 0.08)
+        jt = run.report.job_times
+        assert set(jt) == set(run.measured)
+        assert run.report.compute_s == pytest.approx(sum(jt.values()), rel=1e-12)
+
+
+class TestFDMRuntime:
+    def test_matches_fdm_mine(self):
+        """FDM through the one shared scheduler equals the in-process
+        baseline: same frequents, same k-round ledger, same candidates."""
+        _, sites = tx_sites()
+        rt = GridRuntime(engine=fast_engine(), count_backend="jnp")
+        run = rt.run_fdm(sites, 3, 0.08)
+        _, sites2 = tx_sites()
+        ref = fdm_mine(sites2, 3, 0.08)
+        assert run.result.frequent == ref.frequent
+        assert run.result.comm.rounds == ref.comm.rounds
+        assert run.result.per_level_candidates == ref.per_level_candidates
+
+    def test_skewed_split_count_call_parity(self):
+        """A site with zero candidates at some level must ledger the same
+        count_calls through the job decomposition as through fdm_mine
+        (regression: the job path used to skip the per-site call that
+        fdm_mine ledgered, or vice versa)."""
+        dense = ibm_transactions(seed=2, n_tx=400, n_items=20, avg_tx_len=5, n_patterns=6)
+        mk = lambda: [TransactionDB.from_dense(dense[:3]), TransactionDB.from_dense(dense[3:])]
+        ref = fdm_mine(mk(), 3, 0.1)
+        rt = GridRuntime(engine=fast_engine(), count_backend="jnp")
+        run = rt.run_fdm(mk(), 3, 0.1)
+        assert run.result.comm.count_calls == ref.comm.count_calls
+        assert run.result.comm.bytes_sent == ref.comm.bytes_sent
+        assert run.result.frequent == ref.frequent
+
+    def test_gfm_needs_fewer_rounds_than_fdm(self):
+        """The paper's protocol comparison, reproduced through the runtime:
+        GFM's single synchronization vs FDM's per-level barriers."""
+        _, sites = tx_sites()
+        rt = GridRuntime(engine=fast_engine(), count_backend="jnp")
+        g = rt.run_gfm(sites, 3, 0.08)
+        _, sites2 = tx_sites()
+        f = rt.run_fdm(sites2, 3, 0.08)
+        assert g.result.comm.rounds < f.result.comm.rounds
+
+
+class TestBenchRuntime:
+    def test_smoke_writes_valid_json(self, tmp_path):
+        """The benchmark emits a parseable BENCH_runtime.json with the
+        trajectory keys CI tracks."""
+        import json
+
+        out = tmp_path / "BENCH_runtime.json"
+        sys.path.insert(0, os.path.abspath(os.path.join(os.path.dirname(__file__), "..")))
+        from benchmarks import bench_runtime
+
+        payload = bench_runtime.run(smoke=True, out=str(out), use_kernel=False)
+        on_disk = json.loads(out.read_text())
+        assert on_disk["meta"]["smoke"] is True
+        for app in ("vclustering", "gfm", "fdm"):
+            for key in ("wall_s", "compute_s", "overhead_pct", "rounds", "bytes"):
+                assert key in on_disk[app], (app, key)
+        assert on_disk["gfm"]["rounds"] == 2
+        assert payload["vclustering"]["n_global"] >= 1

@@ -4,12 +4,13 @@ prevention, spec building — pure-host tests (AbstractMesh, no devices)."""
 import jax
 import numpy as np
 import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
+from repro.compat import abstract_mesh
 from repro.sharding import BASELINE, GRIDLOCAL, Rules, ShapeAxes, logical_to_pspec
 
-MESH1 = AbstractMesh((16, 16), ("data", "model"))
-MESH2 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+MESH1 = abstract_mesh((16, 16), ("data", "model"))
+MESH2 = abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 class TestLogicalToPspec:
@@ -51,9 +52,10 @@ class TestLogicalToPspec:
         # dim 32 with rule (pod, data) = 2*16: full product divides
         sp = logical_to_pspec(("batch",), (32,), BASELINE, MESH2)
         assert sp == P(("pod", "data"))
-        # dim 2 only allows pod
+        # dim 2 only allows pod (singleton tuples canonicalize to the bare
+        # axis name on current jax; older versions keep them distinct)
         sp2 = logical_to_pspec(("batch",), (2,), BASELINE, MESH2)
-        assert sp2 == P(("pod",))
+        assert sp2 in (P("pod"), P(("pod",)))
 
 
 class TestShapeAxes:

@@ -8,7 +8,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # hermetic env: deterministic shim, no shrinking
+    from repro.testing import given, settings, strategies as st
 
 from repro.core.stats import (
     SuffStats,
