@@ -15,7 +15,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import row
 from repro.core.vclustering import VClusterConfig, vcluster_pooled

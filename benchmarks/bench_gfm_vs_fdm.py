@@ -12,9 +12,7 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
-
-from benchmarks.common import row, timeit
+from benchmarks.common import row
 from repro.core.apriori import TransactionDB
 from repro.core.fdm import fdm_mine
 from repro.core.gfm import gfm_mine

@@ -32,6 +32,8 @@ def _report_block(run, rounds: int, comm_bytes: int, extra: dict) -> dict:
     return {
         "wall_s": rep.wall_s,
         "compute_s": rep.compute_s,
+        "critical_compute_s": rep.critical_compute_s,
+        "critical_transfer_s": rep.critical_transfer_s,
         "overhead_pct": rep.overhead_pct(),
         "prep_s": rep.prep_s,
         "submit_s": rep.submit_s,
@@ -40,11 +42,20 @@ def _report_block(run, rounds: int, comm_bytes: int, extra: dict) -> dict:
         "bytes": comm_bytes,
         "n_jobs": len(rep.job_times),
         "sync_mode": run.sync_mode,
+        "schedule": run.schedule,
+        "estimated_s": run.estimated_s,
+        "estimated_staged_s": run.estimated_staged_s,
+        "est_overhead_pct": run.est_overhead_pct(),
         **extra,
     }
 
 
-def run(smoke: bool = False, out: str = "BENCH_runtime.json", use_kernel: bool | None = None) -> dict:
+def run(
+    smoke: bool = False,
+    out: str = "BENCH_runtime.json",
+    use_kernel: bool | None = None,
+    schedule: str = "staged",
+) -> dict:
     from repro.core.apriori import TransactionDB
     from repro.core.vclustering import VClusterConfig
     from repro.data.synthetic import (
@@ -74,7 +85,9 @@ def run(smoke: bool = False, out: str = "BENCH_runtime.json", use_kernel: bool |
     sites = [TransactionDB.from_dense(s) for s in split_transactions(dense, n_sites, seed=0)]
 
     backend = "kernel" if use_kernel else "jnp"
-    rt = GridRuntime.for_sites(n_sites, use_kernel=use_kernel, count_backend=backend)
+    rt = GridRuntime.for_sites(
+        n_sites, use_kernel=use_kernel, count_backend=backend, schedule=schedule
+    )
     cfg = VClusterConfig(k_local=k_local, kmeans_iters=iters, use_kernel=use_kernel)
 
     vrun = rt.run_vclustering(jax.random.PRNGKey(0), xs, cfg)
@@ -112,6 +125,7 @@ def run(smoke: bool = False, out: str = "BENCH_runtime.json", use_kernel: bool |
             "python": platform.python_version(),
             "jax": jax.__version__,
             "n_sites": n_sites,
+            "schedule": schedule,
             "clustering_shape": [n_pts, dim, k_local],
             "itemsets_shape": [n_tx, n_items, k_items, minsup],
         },
@@ -153,11 +167,18 @@ def main() -> None:
         default="auto",
         help="Pallas kernels: auto = smoke/TPU only",
     )
+    ap.add_argument(
+        "--schedule",
+        choices=["staged", "async"],
+        default="staged",
+        help="engine scheduler: stage-barrier or event-driven",
+    )
     args = ap.parse_args()
     run(
         smoke=args.smoke,
         out=args.out,
         use_kernel=None if args.kernel == "auto" else args.kernel == "on",
+        schedule=args.schedule,
     )
 
 

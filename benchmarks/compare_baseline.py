@@ -1,0 +1,149 @@
+"""CI perf-regression gate: diff a fresh ``BENCH_sweep.json`` against the
+committed ``BENCH_baseline.json`` and fail on regression.
+
+What is compared, per sweep cell (app x n_sites x links x compute_scale x
+schedule):
+
+  * machine-INDEPENDENT simulated components — ``prep_s``, ``submit_s``,
+    ``transfer_s`` — byte-for-byte of the grid model, so they get a tight
+    relative band (default 1%): any drift is a scheduler/model change,
+    not noise;
+  * ``wall_s`` and ``overhead_pct`` — these embed the calibrated device
+    compute, which varies across hosts, so they get loose bands (default
+    30% / 5 points; overhead_pct only at compute_scale x1, where compute
+    is a sliver of the wall) that still catch order-of-magnitude
+    regressions (losing submit pipelining, double-charged staging,
+    barrier reintroduction);
+  * the async<=staged invariant on every candidate comparison row — the
+    event-driven scheduler must never lose to the stage-barrier one on
+    identical replayed times.
+
+Regressions are one-sided: a candidate that got FASTER passes (with a
+note suggesting a baseline refresh).  Cells present in the baseline but
+missing from the candidate fail (coverage must not silently shrink).
+
+Refresh the baseline intentionally with:
+
+    PYTHONPATH=src python -m benchmarks.bench_sweep --smoke --out BENCH_baseline.json
+
+    PYTHONPATH=src python -m benchmarks.compare_baseline \
+        --baseline BENCH_baseline.json --candidate BENCH_sweep.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+CELL_KEY = ("app", "n_sites", "links", "compute_scale", "schedule")
+STRICT_FIELDS = ("prep_s", "submit_s", "transfer_s")
+
+
+def _key(cell: dict) -> tuple:
+    return tuple(cell[k] for k in CELL_KEY)
+
+
+def compare(
+    baseline: dict,
+    candidate: dict,
+    tol_strict: float = 0.01,
+    tol_wall: float = 0.30,
+    tol_overhead_pts: float = 5.0,
+) -> tuple[list[str], list[str]]:
+    """Returns (failures, notes)."""
+    failures: list[str] = []
+    notes: list[str] = []
+    base_cells = {_key(c): c for c in baseline.get("cells", [])}
+    cand_cells = {_key(c): c for c in candidate.get("cells", [])}
+
+    for key, base in sorted(base_cells.items()):
+        tag = "/".join(str(k) for k in key)
+        cand = cand_cells.get(key)
+        if cand is None:
+            failures.append(f"{tag}: cell missing from candidate sweep")
+            continue
+        for fld in STRICT_FIELDS:
+            b, c = base[fld], cand[fld]
+            if c > b * (1 + tol_strict) + 1e-9:
+                failures.append(
+                    f"{tag}: {fld} regressed {b:.3f}s -> {c:.3f}s "
+                    f"(simulated component; tolerance {tol_strict:.0%})"
+                )
+            elif c < b * (1 - tol_strict) - 1e-9:
+                notes.append(
+                    f"{tag}: {fld} improved {b:.3f}s -> {c:.3f}s — refresh the baseline"
+                )
+        b, c = base["wall_s"], cand["wall_s"]
+        if c > b * (1 + tol_wall):
+            failures.append(f"{tag}: wall_s regressed {b:.2f}s -> {c:.2f}s (tolerance {tol_wall:.0%})")
+        elif c < b * (1 - tol_wall):
+            notes.append(f"{tag}: wall_s improved {b:.2f}s -> {c:.2f}s — refresh the baseline")
+        # overhead_pct embeds calibrated compute in its denominator; the
+        # what-if compute scales multiply the calibration noise, so the
+        # band is only meaningful at x1 (the Table 3 cells, where compute
+        # is a sliver of the simulated wall).  Scaled cells stay covered
+        # by the strict simulated components and the wall band.
+        if base.get("compute_scale", 1) == 1:
+            b, c = base["overhead_pct"], cand["overhead_pct"]
+            if c > b + tol_overhead_pts:
+                failures.append(
+                    f"{tag}: overhead_pct regressed {b:.2f} -> {c:.2f} "
+                    f"(tolerance {tol_overhead_pts} points)"
+                )
+
+    def comp_key(comp: dict) -> tuple:
+        return (comp["app"], comp["n_sites"], comp["links"], comp["compute_scale"])
+
+    cand_comps = {comp_key(c): c for c in candidate.get("comparisons", [])}
+    # coverage must not silently shrink: every baseline comparison row must
+    # exist in the candidate so the invariant is actually exercised
+    for comp in baseline.get("comparisons", []):
+        key = comp_key(comp)
+        if key not in cand_comps:
+            tag = f"{key[0]}/s{key[1]}/{key[2]}/x{key[3]}"
+            failures.append(f"{tag}: comparison row missing from candidate sweep")
+    for comp in cand_comps.values():
+        s, a = comp["wall_staged_s"], comp["wall_async_s"]
+        tag = f"{comp['app']}/s{comp['n_sites']}/{comp['links']}/x{comp['compute_scale']}"
+        if a > s * 1.01 + 1e-9:
+            failures.append(f"{tag}: invariant violated — async wall {a:.2f}s > staged {s:.2f}s")
+
+    return failures, notes
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", default="BENCH_baseline.json")
+    ap.add_argument("--candidate", default="BENCH_sweep.json")
+    ap.add_argument("--tol-strict", type=float, default=0.01)
+    ap.add_argument("--tol-wall", type=float, default=0.30)
+    ap.add_argument("--tol-overhead-pts", type=float, default=5.0)
+    args = ap.parse_args()
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.candidate) as f:
+        candidate = json.load(f)
+
+    failures, notes = compare(
+        baseline,
+        candidate,
+        tol_strict=args.tol_strict,
+        tol_wall=args.tol_wall,
+        tol_overhead_pts=args.tol_overhead_pts,
+    )
+    for n in notes:
+        print(f"NOTE  {n}")
+    for f_ in failures:
+        print(f"FAIL  {f_}")
+    n_cells = len(baseline.get("cells", []))
+    if failures:
+        print(f"# perf gate: {len(failures)} regression(s) across {n_cells} baseline cells")
+        return 1
+    print(f"# perf gate: OK ({n_cells} baseline cells within tolerance)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -15,7 +15,6 @@ from pathlib import Path
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.apriori import TransactionDB, local_apriori
 from repro.core.gfm import gfm_mine

@@ -5,7 +5,6 @@
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.apriori import TransactionDB
 from repro.core.fdm import fdm_mine

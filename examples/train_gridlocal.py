@@ -52,7 +52,7 @@ def main():
     # per-site replicas (the pod axis, simulated sequentially on CPU)
     sites = [materialize_state(cfg, jax.random.PRNGKey(0)) for _ in range(args.sites)]
     outer = outer_init(sites[0]["params"])
-    pbytes = sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(sites[0]["params"]))
+    pbytes = sum(leaf.size * leaf.dtype.itemsize for leaf in jax.tree.leaves(sites[0]["params"]))
     sync_bytes = 0
 
     def one_step(step):

@@ -166,6 +166,9 @@ def fdm_site_jobs(
     levels are laid out statically; levels past exhaustion no-op.  The
     terminal ``collect`` job's result is an ``FDMResult`` equal to
     ``fdm_mine``'s.  Shares one CommLog — run without fault injection.
+    Safe under both engine schedulers: each level's ledger mutations are
+    ordered by the dependency chain (count -> announce -> remote ->
+    decide), which ``schedule="async"`` preserves.
     """
     from repro.workflow.sitejob import SiteJob, timed
 

@@ -240,7 +240,10 @@ def gfm_site_jobs(
     ``gfm_mine`` — exactly 2 rounds under uniform thresholds.
 
     The jobs share one CommLog, so run them without fault injection
-    (a retried ``pool`` would ledger its round twice).
+    (a retried ``pool`` would ledger its round twice).  Both engine
+    schedulers are safe: under ``schedule="async"`` the dependency edges
+    alone order every CommLog mutation (pool after all aprioris, decide
+    after all recounts), and speculation never re-executes a job's fn.
     """
     from repro.workflow.sitejob import SiteJob, timed
 

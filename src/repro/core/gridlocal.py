@@ -29,7 +29,7 @@ class GridLocalReport:
 
 
 def param_bytes(params) -> int:
-    return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(params))
+    return sum(leaf.size * leaf.dtype.itemsize for leaf in jax.tree.leaves(params))
 
 
 def simulate(

@@ -314,8 +314,9 @@ def vcluster_site_jobs(
     synchronization (``merge``) — ``sync(per_site_stats) -> MergeResult``
     is injected by the runtime (shard_map all_gather on a device mesh, or
     the default in-process pooled merge).  Stage 3: per-site border
-    perturbation (``perturb_i``, zero communication).  The terminal
-    ``collect`` job's result is a ``VClusterResult``.
+    perturbation (``perturb_i`` — no inter-site communication; the final
+    point labels are staged back to the submit node, ``output_bytes``).
+    The terminal ``collect`` job's result is a ``VClusterResult``.
 
     All jobs return TimedResults, so the engine's grid clock is advanced by
     real measured kernel time; ``measured`` (if given) receives the same
@@ -382,6 +383,7 @@ def vcluster_site_jobs(
                 fn=timed(perturb_fn(i), measured, f"perturb_{i}"),
                 deps=[f"cluster_{i}", "merge"],
                 site=i,  # GridModel.transfer_s normalizes to its link matrix
+                output_bytes=n * 4,  # int32 point labels staged back
             )
         )
 

@@ -7,11 +7,8 @@ are VALIDATED via the interpreter and TARGET TPU).
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.kernels import ref
 from repro.kernels.kmeans_assign import BIG, kmeans_assign_pallas

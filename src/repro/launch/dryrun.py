@@ -15,7 +15,6 @@ Outputs land in experiments/dryrun/<arch>__<shape>__<mesh>[__<rules>].json.
 """
 
 import argparse
-import dataclasses
 import json
 import sys
 import time
@@ -43,7 +42,8 @@ from repro.train import steps as steps_mod
 
 OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
 
-_IS_SA = lambda x: isinstance(x, ShapeAxes)
+def _IS_SA(x):
+    return isinstance(x, ShapeAxes)
 
 
 def _as_dtype(tree, dtype: str):

@@ -10,7 +10,6 @@ which is what lets the 32k-prefill shapes fit the dry-run memory budget.
 from __future__ import annotations
 
 import math
-from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -94,7 +93,7 @@ def chunked_attention(
     # chunk from (q, kc, vc) — never stored across the KV scan (this is
     # what keeps train/prefill memory linear in S instead of quadratic)
     def body(carry, inp):
-        m, l, acc = carry
+        m, den, acc = carry
         kc, vc, kp = inp  # (B, C, Kv, Dh), (B, C, Kv, Dh), (C,)
         s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kc.astype(qf.dtype))  # (B,Kv,G,Sq,C)
         s = s.astype(jnp.float32)
@@ -119,16 +118,16 @@ def chunked_attention(
             row_valid &= q_pos - kp_max_real < window
         p = p * row_valid[None, None, None, :, None].astype(p.dtype)
         corr = jnp.exp(m - m_new)
-        l = l * corr + jnp.sum(p.astype(jnp.float32), axis=-1)
+        den = den * corr + jnp.sum(p.astype(jnp.float32), axis=-1)
         pv = jnp.einsum("bhgqk,bkhd->bhgqd", p, vc)
         acc = acc * corr[..., None].astype(acc.dtype) + pv
-        return (m_new, l, acc), None
+        return (m_new, den, acc), None
 
     m0 = jnp.full((b, kvh, g, sq), NEG, jnp.float32)
-    l0 = jnp.zeros((b, kvh, g, sq), jnp.float32)
+    den0 = jnp.zeros((b, kvh, g, sq), jnp.float32)
     a0 = jnp.zeros((b, kvh, g, sq, dh), q.dtype)
-    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (ks, vs, kps))
-    out = acc / jnp.maximum(l, 1e-30)[..., None].astype(acc.dtype)
+    (m, den, acc), _ = jax.lax.scan(body, (m0, den0, a0), (ks, vs, kps))
+    out = acc / jnp.maximum(den, 1e-30)[..., None].astype(acc.dtype)
     # (B, Kv, G, Sq, Dh) -> (B, Sq, Kv, G, Dh)
     return out.transpose(0, 3, 1, 2, 4)
 

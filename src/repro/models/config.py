@@ -4,7 +4,7 @@ fine-grained with shared experts), Mamba2 hybrids, xLSTM, and enc-dec."""
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 
 
 @dataclass(frozen=True)

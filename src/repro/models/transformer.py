@@ -19,7 +19,6 @@ Three entry points per architecture:
 
 from __future__ import annotations
 
-import functools
 import math
 from typing import Any
 
@@ -155,7 +154,7 @@ def param_count(cfg: ModelConfig) -> int:
     leaves = jax.tree.leaves(
         param_specs(cfg), is_leaf=lambda x: hasattr(x, "axes") and hasattr(x, "shape")
     )
-    return sum(math.prod(l.shape) for l in leaves)
+    return sum(math.prod(leaf.shape) for leaf in leaves)
 
 
 def active_param_count(cfg: ModelConfig) -> int:
@@ -343,7 +342,8 @@ def _cross_decode(cfg, p, x, ck, cv):
 # ---------------------------------------------------------------------------
 
 
-ZERO_AUX = lambda: {"aux_loss": jnp.float32(0.0), "z_loss": jnp.float32(0.0)}
+def ZERO_AUX():
+    return {"aux_loss": jnp.float32(0.0), "z_loss": jnp.float32(0.0)}
 
 
 def _shared_attn_block(cfg, p, x, q_pos, mode, cache, pos, aux, chunk):

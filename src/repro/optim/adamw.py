@@ -34,7 +34,9 @@ def lr_at(cfg: AdamWConfig, step) -> jax.Array:
 
 
 def adamw_init(params):
-    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    def zeros(p):
+        return jnp.zeros(p.shape, jnp.float32)
+
     return {
         "step": jnp.zeros((), jnp.int32),
         "m": jax.tree.map(zeros, params),
@@ -44,7 +46,7 @@ def adamw_init(params):
 
 def global_norm(tree) -> jax.Array:
     leaves = jax.tree.leaves(tree)
-    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+    return jnp.sqrt(sum(jnp.sum(leaf.astype(jnp.float32) ** 2) for leaf in leaves))
 
 
 def adamw_update(cfg: AdamWConfig, grads, state, params):

@@ -6,7 +6,7 @@ so every experiment in EXPERIMENTS.md §Perf is reproducible by name.
 
 from __future__ import annotations
 
-from repro.sharding import BASELINE, GRIDLOCAL, Rules
+from repro.sharding import BASELINE, Rules
 
 _REGISTRY: dict[str, Rules] = {}
 

@@ -40,7 +40,13 @@ from repro.core.vclustering import (
 from repro.core.stats import SuffStats
 from repro.launch.mesh import make_site_mesh
 from repro.workflow.engine import Engine, RunReport
-from repro.workflow.overhead import GridModel
+from repro.workflow.overhead import (
+    GridModel,
+    estimate_dag,
+    estimate_stages_from_specs,
+    overhead_pct,
+)
+from repro.workflow.sitejob import job_specs
 
 
 @dataclass
@@ -53,6 +59,22 @@ class RuntimeRun:
     report: RunReport
     measured: dict[str, float] = field(default_factory=dict)
     sync_mode: str = "pooled"  # how the single synchronization executed
+    schedule: str = "staged"  # which engine scheduler executed the DAG
+    # the analytical view of the DAG that was actually executed (deps,
+    # bytes, sites, measured compute) — feed to overhead.estimate_* or
+    # sitejob.replay_dag; the sweep benchmark replays exactly these
+    specs: list = field(default_factory=list)
+    # analytical bounds (paper §5.2.2), calibrated by the measured job
+    # times: per-job critical path (the async ideal) and the stage-barrier
+    # formula (the staged ideal)
+    estimated_s: float = 0.0
+    estimated_staged_s: float = 0.0
+
+    def est_overhead_pct(self) -> float:
+        """Table 3's 'Estimated overhead': measured wall vs the analytical
+        bound matching this run's schedule mode."""
+        est = self.estimated_s if self.schedule == "async" else self.estimated_staged_s
+        return overhead_pct(self.report.wall_s, est)
 
 
 class GridRuntime:
@@ -75,10 +97,27 @@ class GridRuntime:
         sync: str = "auto",
         use_kernel: bool = True,
         count_backend: str = "kernel",
+        schedule: str | None = None,
     ):
         if sync not in ("auto", "shard_map", "pooled"):
             raise ValueError(f"unknown sync mode {sync!r}")
-        self.engine = engine or Engine(model=GridModel(), overlap_prep=True)
+        # ``schedule`` threads the engine's scheduler mode ("staged" |
+        # "async") through the runtime; None keeps the given engine's own
+        # mode (or the Engine default) untouched.  A caller-supplied
+        # engine is never mutated — a differing schedule gets an
+        # equivalent engine with that mode.
+        if engine is None:
+            engine = Engine(model=GridModel(), overlap_prep=True, schedule=schedule or "staged")
+        elif schedule is not None and engine.schedule != schedule:
+            engine = Engine(
+                model=engine.model,
+                faults=engine.faults,
+                rescue_path=engine.rescue_path,
+                overlap_prep=engine.overlap_prep,
+                straggler_factor=engine.straggler_factor,
+                schedule=schedule,
+            )
+        self.engine = engine
         self.mesh = mesh
         self.axis = axis
         self.sync = sync
@@ -133,6 +172,21 @@ class GridRuntime:
 
     # -- applications --------------------------------------------------------
 
+    def _finish_run(self, jobs, rep: RunReport, result, measured, sync_mode: str) -> RuntimeRun:
+        """Attach the measured-time-calibrated analytical bounds to a run."""
+        specs = job_specs(jobs, rep.job_times)
+        model = self.engine.model
+        return RuntimeRun(
+            result=result,
+            report=rep,
+            measured=measured,
+            sync_mode=sync_mode,
+            schedule=rep.schedule,
+            specs=specs,
+            estimated_s=estimate_dag(specs, model),
+            estimated_staged_s=estimate_stages_from_specs(specs, model),
+        )
+
     def run_vclustering(
         self, key: jax.Array, xs, cfg: VClusterConfig | None = None
     ) -> RuntimeRun:
@@ -146,7 +200,7 @@ class GridRuntime:
         sync, mode = self._cluster_sync(xs.shape[0], cfg)
         jobs = vcluster_site_jobs(key, xs, cfg, sync=sync, measured=measured)
         rep, results = self.engine.run_site_jobs(jobs, name="vclustering")
-        return RuntimeRun(result=results["collect"], report=rep, measured=measured, sync_mode=mode)
+        return self._finish_run(jobs, rep, results["collect"], measured, mode)
 
     def run_gfm(
         self, sites, k: int, minsup: float, local_minsup: float | None = None
@@ -162,7 +216,7 @@ class GridRuntime:
             measured=measured,
         )
         rep, results = self.engine.run_site_jobs(jobs, name="gfm")
-        return RuntimeRun(result=results["decide"], report=rep, measured=measured, sync_mode="host")
+        return self._finish_run(jobs, rep, results["decide"], measured, "host")
 
     def run_fdm(self, sites, k: int, minsup: float) -> RuntimeRun:
         """FDM baseline through the same scheduler (k level-synchronous
@@ -170,4 +224,4 @@ class GridRuntime:
         measured: dict[str, float] = {}
         jobs = fdm_site_jobs(sites, k, minsup, backend=self.count_backend, measured=measured)
         rep, results = self.engine.run_site_jobs(jobs, name="fdm")
-        return RuntimeRun(result=results["collect"], report=rep, measured=measured, sync_mode="host")
+        return self._finish_run(jobs, rep, results["collect"], measured, "host")

@@ -6,12 +6,8 @@ ShapeAxes spec trees needed to derive in/out shardings for jit.
 
 from __future__ import annotations
 
-import functools
-from typing import Any, NamedTuple
-
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
@@ -36,8 +32,13 @@ def train_state_specs(cfg: ModelConfig, n_pods: int = 0) -> dict:
     leading 'grid' axis of that size (one replica per pod, sharded over
     `pod` by the GRIDLOCAL rules)."""
     p_specs = T.param_specs(cfg)
-    is_sa = lambda x: isinstance(x, ShapeAxes)
-    f32 = lambda s: ShapeAxes(shape=s.shape, dtype="float32", axes=s.axes)
+
+    def is_sa(x):
+        return isinstance(x, ShapeAxes)
+
+    def f32(s):
+        return ShapeAxes(shape=s.shape, dtype="float32", axes=s.axes)
+
     state = {
         "params": p_specs,
         "opt": {
@@ -160,12 +161,16 @@ def make_gridlocal_train_step(
     n_pods = mesh.shape["pod"]
     inner = make_train_step(cfg, opt_cfg, loss_chunk, grad_accum)
     p_specs = T.param_specs(cfg)
-    is_sa = lambda x: isinstance(x, ShapeAxes)
+
+    def is_sa(x):
+        return isinstance(x, ShapeAxes)
 
     def step_fn(state, batch):
         from repro.sharding import constrain
 
-        split = lambda x: x.reshape(n_pods, x.shape[0] // n_pods, *x.shape[1:])
+        def split(x):
+            return x.reshape(n_pods, x.shape[0] // n_pods, *x.shape[1:])
+
         vbatch = jax.tree.map(split, batch)
         vstate = {"params": state["params"], "opt": state["opt"]}
         new_inner, metrics = jax.vmap(inner)(vstate, vbatch)
@@ -235,7 +240,10 @@ def make_gridlocal_train_step(
 
 def gridlocal_init(cfg: ModelConfig, key: jax.Array, n_pods: int) -> dict:
     params = T.init_params(cfg, key)
-    stack = lambda t: jax.tree.map(lambda x: jnp.broadcast_to(x[None], (n_pods, *x.shape)), t)
+
+    def stack(t):
+        return jax.tree.map(lambda x: jnp.broadcast_to(x[None], (n_pods, *x.shape)), t)
+
     return {
         "params": stack(params),
         "opt": stack(adamw_init(params)),

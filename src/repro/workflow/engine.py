@@ -10,9 +10,31 @@ paper measures:
   * fault injection with DAGMan-style retries;
   * rescue files: a crashed run resumes from the last completed frontier
     (``rescue_path``), re-executing only unfinished jobs;
-  * straggler mitigation: jobs whose simulated runtime exceeds
-    ``straggler_factor`` x the stage median are duplicated and the fastest
-    copy wins (speculative execution).
+  * straggler mitigation: speculative duplicates of outlier jobs, first
+    completion wins (``straggler_factor``).  The detector is
+    per-scheduler: staged compares each job's stage total (staging +
+    compute) against the stage median; async compares measured compute
+    against the compute median of already-started jobs (staging is a
+    deterministic model quantity there, not a straggler symptom).
+
+Two schedulers share those semantics:
+
+  * ``schedule="staged"`` — the original stage-barrier loop: the ready
+    frontier runs as one synchronous stage, the next frontier only after
+    the whole stage completes.  This is what a level-synchronous grid
+    deployment does and what ``overhead.estimate_stages`` bounds.
+  * ``schedule="async"`` — an event-driven simulator: each job
+    independently walks submit -> stage-in -> compute -> stage-out on a
+    simulated-clock event queue, becomes eligible the moment its last
+    dependency completes (no barrier), pays its matchmaking latency in a
+    pipelined fashion (submissions overlap each other and running
+    computation), and contends for per-site worker slots
+    (``GridModel.workers_per_site``) through per-site FIFO queues.
+    Its analytical bound is ``overhead.estimate_dag``.  Because staged
+    mode models unlimited per-site parallelism within a stage, async
+    wall <= staged wall is guaranteed only while per-site concurrency
+    stays within the worker slots (true for both applications' DAGs,
+    which run one job per site per wave).
 
 The COMPUTE time of each job is measured for real (wall clock of fn());
 everything grid-related advances the simulated clock, so experiments are
@@ -22,8 +44,10 @@ approximate and the paper laments ordinary grids lack.
 
 from __future__ import annotations
 
+import heapq
 import json
 import time
+from collections import deque
 from dataclasses import dataclass, field
 from pathlib import Path
 
@@ -31,23 +55,45 @@ from repro.workflow.dag import DAG, Job, TimedResult
 from repro.workflow.faults import FaultInjector
 from repro.workflow.overhead import GridModel
 
+SCHEDULES = ("staged", "async")
+
 
 @dataclass
 class RunReport:
     wall_s: float = 0.0  # simulated grid wall-clock
     compute_s: float = 0.0  # Σ measured job compute
-    max_stage_compute_s: float = 0.0
+    # The critical path through the schedule, split into its mining-compute
+    # and data-staging components.  Everything else on the wall clock
+    # (preparation, submission, queue waits, barrier gaps) is overhead by
+    # construction; staging is ALSO overhead — the grid moved bytes the
+    # mining never needed moved — so overhead_pct() charges it as such.
+    critical_compute_s: float = 0.0
+    critical_transfer_s: float = 0.0
     prep_s: float = 0.0
-    submit_s: float = 0.0
-    transfer_s: float = 0.0
+    submit_s: float = 0.0  # Σ submit latency charged (may overlap compute)
+    transfer_s: float = 0.0  # Σ staging over ALL jobs, not just critical
     retries: int = 0
     speculative: int = 0
+    schedule: str = "staged"
     job_times: dict = field(default_factory=dict)
 
+    @property
+    def critical_path_s(self) -> float:
+        return self.critical_compute_s + self.critical_transfer_s
+
+    @property
+    def max_stage_compute_s(self) -> float:
+        """Backward-compat alias for the pre-split field.  Historically this
+        accumulated transfer+compute per stage under a compute-only name,
+        which made overhead_pct() silently credit staging as mining time."""
+        return self.critical_path_s
+
     def overhead_pct(self) -> float:
+        """Share of the wall clock that is grid overhead rather than mining
+        compute (prep + submission + staging + waits), Table 3 style."""
         if self.wall_s <= 0:
             return 0.0
-        return 100.0 * (self.wall_s - self.max_stage_compute_s) / self.wall_s
+        return 100.0 * (self.wall_s - self.critical_compute_s) / self.wall_s
 
 
 class Engine:
@@ -58,12 +104,16 @@ class Engine:
         rescue_path: str | Path | None = None,
         overlap_prep: bool = False,
         straggler_factor: float = 0.0,  # 0 = no speculation
+        schedule: str = "staged",
     ):
+        if schedule not in SCHEDULES:
+            raise ValueError(f"unknown schedule {schedule!r}; expected one of {SCHEDULES}")
         self.model = model or GridModel()
         self.faults = faults or FaultInjector()
         self.rescue_path = Path(rescue_path) if rescue_path else None
         self.overlap_prep = overlap_prep
         self.straggler_factor = straggler_factor
+        self.schedule = schedule
 
     # -- rescue bookkeeping --------------------------------------------------
 
@@ -89,11 +139,13 @@ class Engine:
         rep = self.run(build_dag(site_jobs, name), results=results)
         return rep, results
 
-    def run(self, dag: DAG, results: dict | None = None) -> RunReport:
+    def run(self, dag: DAG, results: dict | None = None, schedule: str | None = None) -> RunReport:
+        schedule = schedule or self.schedule
+        if schedule not in SCHEDULES:
+            raise ValueError(f"unknown schedule {schedule!r}; expected one of {SCHEDULES}")
         dag.validate_acyclic()
-        rep = RunReport()
+        rep = RunReport(schedule=schedule)
         results = results if results is not None else {}
-        clock = 0.0
 
         # workflow preparation (the 295 s DAGMan latency).  With
         # overlap_prep the first stage's submission pipeline hides all but
@@ -101,7 +153,6 @@ class Engine:
         prep = self.model.prep_latency_s
         if self.overlap_prep:
             prep = min(prep, 10.0)
-        clock += prep
         rep.prep_s = prep
 
         done = self._load_rescue(dag)
@@ -109,13 +160,23 @@ class Engine:
             if name in dag.jobs:
                 dag.jobs[name].status = "done"
 
+        if schedule == "async":
+            self._run_async(dag, results, rep, done)
+        else:
+            self._run_staged(dag, results, rep, done)
+        return rep
+
+    # -- staged (stage-barrier) scheduler -------------------------------------
+
+    def _run_staged(self, dag: DAG, results: dict, rep: RunReport, done: set[str]) -> None:
+        clock = rep.prep_s
+
         while not dag.done():
             stage = dag.ready()
             if not stage:
                 failed = dag.failed()
                 raise RuntimeError(f"workflow stuck; failed jobs: {[j.name for j in failed]}")
 
-            stage_times: list[float] = []
             # submit latency: serial per job unless overlapped
             submit = self.model.submit_latency_s * len(stage)
             if self.overlap_prep:
@@ -123,39 +184,260 @@ class Engine:
             clock += submit
             rep.submit_s += submit
 
+            splits: list[tuple[float, float]] = []  # (transfer, compute) per job
             for job in stage:
-                t_job, attempts = self._run_job(job, results, rep)
+                transfer, dt, attempts = self._execute(job, results, rep, done)
                 rep.retries += attempts - 1
-                stage_times.append(t_job)
+                splits.append((transfer, dt))
 
             # straggler speculation: duplicate the slowest job(s) if they
             # exceed factor x median — the duplicate "runs elsewhere" and
-            # wins with the stage-median time.
-            eff_times = list(stage_times)
-            if self.straggler_factor and len(stage_times) >= 3:
-                med = sorted(stage_times)[len(stage_times) // 2]
-                for i, t in enumerate(eff_times):
-                    if t > self.straggler_factor * med:
-                        eff_times[i] = med  # speculative copy wins
+            # wins with the stage-median time (charged entirely as compute,
+            # since the winning copy's own staging is not modelled).
+            eff = list(splits)
+            if self.straggler_factor and len(splits) >= 3:
+                totals = sorted(tr + dt for tr, dt in splits)
+                med = totals[len(totals) // 2]
+                for i, (tr, dt) in enumerate(eff):
+                    if tr + dt > self.straggler_factor * med:
+                        eff[i] = (0.0, med)  # speculative copy wins
                         rep.speculative += 1
 
-            stage_wall = max(eff_times) if eff_times else 0.0
-            rep.max_stage_compute_s += max(eff_times) if eff_times else 0.0
-            clock += stage_wall
+            if eff:
+                tr_c, dt_c = max(eff, key=lambda p: p[0] + p[1])
+                rep.critical_transfer_s += tr_c
+                rep.critical_compute_s += dt_c
+                clock += tr_c + dt_c
 
             done.update(j.name for j in stage if j.status == "done")
             self._save_rescue(done)
 
         rep.wall_s = clock
-        return rep
 
-    def _run_job(self, job: Job, results: dict, rep: RunReport) -> tuple[float, int]:
-        """Execute one job (with retries); returns (simulated job time,
-        attempts).  Simulated time = staging + measured compute."""
-        transfer = self.model.transfer_s(0, job.site, job.input_bytes) + self.model.transfer_s(
-            job.site, 0, job.output_bytes
+    # -- async (event-driven) scheduler ---------------------------------------
+
+    def _run_async(self, dag: DAG, results: dict, rep: RunReport, done: set[str]) -> None:
+        """Simulated-clock event queue: every job independently walks
+        submit -> stage-in -> compute -> stage-out; per-site worker slots
+        (``GridModel.workers_per_site``) model contention via FIFO queues;
+        a job is submitted the instant its last dependency completes.
+
+        fn() executes at slot-acquisition order on the simulated clock, so
+        jobs sharing mutable state (the CommLog builders) still observe
+        dependency order.  Determinism: events tie-break on insertion
+        sequence, so identical (dag, model, measured times, seed) replay
+        identically.
+        """
+        model = self.model
+        workers = max(1, model.workers_per_site)
+        t0 = rep.prep_s
+
+        heap: list[tuple[float, int, str, str]] = []  # (time, seq, kind, job)
+        seq = 0
+
+        def push(t: float, kind: str, name: str) -> None:
+            nonlocal seq
+            heapq.heappush(heap, (t, seq, kind, name))
+            seq += 1
+
+        pending = {
+            j.name: sum(1 for d in j.deps if dag.jobs[d].status != "done")
+            for j in dag.jobs.values()
+            if j.status != "done"
+        }
+        finish_t: dict[str, float] = {n: t0 for n in done if n in dag.jobs}
+        pred: dict[str, str | None] = dict.fromkeys(finish_t)
+        # (transfer, compute) on the schedule for finished jobs
+        split: dict[str, tuple[float, float]] = dict.fromkeys(finish_t, (0.0, 0.0))
+        site_busy: dict[int, int] = {j.site: 0 for j in dag.jobs.values()}
+        site_queue: dict[int, deque[str]] = {}  # FIFO of jobs waiting for a slot
+        samples: list[float] = []  # measured compute of started jobs
+        clock = t0
+
+        def submit(name: str, t_elig: float) -> None:
+            """Charge per-job matchmaking latency and schedule arrival at
+            the job's site.  Event-driven submission is inherently
+            pipelined — each job pays the latency, but submissions overlap
+            each other and running computation (the paper's "partly
+            overlapped by computations in the DAG"), unlike the staged
+            scheduler's serial per-stage submit loop."""
+            lat = model.submit_latency_s
+            rep.submit_s += lat
+            push(t_elig + lat, "arrive", name)
+
+        # jobs whose compute is in flight on the simulated clock:
+        # name -> {t_start, transfer_in, transfer_out, dt, t_done, spec}
+        running: dict[str, dict] = {}
+        version: dict[str, int] = {}
+
+        def maybe_speculate(t_now: float) -> None:
+            """Online straggler detection: whenever a new compute sample
+            lands, any in-flight job whose measured compute exceeds
+            factor x the sample median gets a speculative duplicate on a
+            second free slot — first completion wins, so its finish event
+            is rescheduled to the duplicate's (lazy-deleted via version).
+            Evaluated at every start (not only a job's own) so a straggler
+            that started BEFORE enough peers had been observed is still
+            caught, and at every slot release so a detection deferred by a
+            full grid fires as soon as capacity exists."""
+            if not self.straggler_factor or len(samples) < 3:
+                return
+            med = sorted(samples)[len(samples) // 2]
+            for name, r in running.items():
+                if r["spec"] or r["dt"] <= self.straggler_factor * med:
+                    continue
+                job = dag.jobs[name]
+                spec_site = self._spec_site(job.site, site_busy, workers)
+                if spec_site is None:
+                    continue  # every slot in the grid is busy
+                # a straggler is only observable once its compute is
+                # actually running — never during its stage-in, even though
+                # the simulator knows dt up-front
+                detect = max(t_now, r["t_start"] + r["transfer_in"])
+                # the duplicate stages the input to ITS slot and stages the
+                # result back — speculation pays real bandwidth, it cannot
+                # finish before its own input arrives
+                tr_dup = model.transfer_s(0, spec_site, job.input_bytes) + model.transfer_s(
+                    spec_site, 0, job.output_bytes
+                )
+                new_done = detect + tr_dup + med
+                if new_done >= r["t_done"]:
+                    continue  # duplicate would not beat the original
+                site_busy[spec_site] += 1  # the duplicate's slot
+                r["spec"] = True
+                r["t_done"] = new_done
+                rep.speculative += 1
+                rep.transfer_s += tr_dup
+                # the winning chain: original stage-in (transfer) + original
+                # compute until detection + duplicate staging (transfer) +
+                # the duplicate's median run — the compute part is always
+                # >= med, never negative
+                transfer = r["transfer_in"] + tr_dup
+                split[name] = (transfer, new_done - r["t_start"] - transfer)
+                version[name] += 1
+                push(new_done, "spec_release", f"{spec_site}")
+                push(new_done, "finish", f"{name}@{version[name]}")
+
+        def start(job: Job, t: float, gate: str | None) -> None:
+            """Acquire a slot at ``t`` and run the job's full bracket."""
+            site_busy[job.site] += 1
+            transfer_in = model.transfer_s(0, job.site, job.input_bytes)
+            transfer_out = model.transfer_s(job.site, 0, job.output_bytes)
+            rep.transfer_s += transfer_in + transfer_out
+            dt, attempts = self._attempt(job, results, rep, done)
+            rep.retries += attempts - 1
+            samples.append(dt)
+            t_done = t + transfer_in + dt + transfer_out
+            pred[job.name] = gate
+            split[job.name] = (transfer_in + transfer_out, dt)
+            running[job.name] = {
+                "t_start": t,
+                "transfer_in": transfer_in,
+                "transfer_out": transfer_out,
+                "dt": dt,
+                "t_done": t_done,
+                "spec": False,
+            }
+            version[job.name] = 0
+            push(t_done, "finish", f"{job.name}@0")
+            maybe_speculate(t)
+
+        for job in dag.jobs.values():  # insertion order = deterministic
+            if job.status != "done" and pending[job.name] == 0:
+                submit(job.name, t0)
+
+        def pop_queue(site: int, t: float, releaser: str | None) -> None:
+            q = site_queue.get(site)
+            if q and site_busy[site] < workers:
+                # the slot release, not the dependency, gated this job
+                start(dag.jobs[q.popleft()], t, releaser)
+
+        while heap:
+            t, _, kind, name = heapq.heappop(heap)
+            if kind == "finish":
+                # payload is "<job>@<version>"; events superseded by a
+                # speculative reschedule are lazily dropped — before the
+                # clock update, or the phantom original would stretch the
+                # wall past the duplicate's win
+                name, _, ver = name.rpartition("@")
+                if int(ver) != version[name]:
+                    continue
+            clock = max(clock, t)
+            if kind == "spec_release":
+                site = int(name)
+                site_busy[site] -= 1
+                pop_queue(site, t, None)
+                maybe_speculate(t)  # the freed slot may admit a duplicate
+                continue
+            if kind == "arrive":
+                job = dag.jobs[name]
+                if site_busy[job.site] < workers:
+                    start(job, t, pred.get(name))  # gated by latest dep
+                else:
+                    site_queue.setdefault(job.site, deque()).append(name)
+                continue
+            # kind == "finish"
+            job = dag.jobs[name]
+            del running[name]
+            site_busy[job.site] -= 1
+            finish_t[name] = t
+            done.add(name)
+            self._save_rescue(done)
+            for dep in dag.jobs.values():
+                if dep.status != "done" and name in dep.deps:
+                    pending[dep.name] -= 1
+                    if pending[dep.name] == 0:
+                        pred[dep.name] = name  # eligibility gated by this job
+                        submit(dep.name, t)
+            pop_queue(job.site, t, name)
+            maybe_speculate(t)  # the freed slot may admit a duplicate
+
+        if not dag.done():
+            failed = dag.failed()
+            raise RuntimeError(f"workflow stuck; failed jobs: {[j.name for j in failed]}")
+
+        rep.wall_s = clock
+        self._credit_critical_path(finish_t, pred, split, rep)
+
+    def _spec_site(self, site: int, site_busy: dict[int, int], workers: int) -> int | None:
+        """Pick the slot for a speculative duplicate: the least-loaded OTHER
+        site (lowest id on ties), falling back to this site's spare slot;
+        None when every slot in the grid is busy (no speculation)."""
+        candidates = sorted(
+            (busy, s) for s, busy in site_busy.items() if s != site and busy < workers
         )
-        rep.transfer_s += transfer
+        if candidates:
+            return candidates[0][1]
+        if site_busy.get(site, 0) < workers:
+            return site
+        return None
+
+    def _credit_critical_path(
+        self,
+        finish_t: dict[str, float],
+        pred: dict[str, str | None],
+        split: dict[str, tuple[float, float]],
+        rep: RunReport,
+    ) -> None:
+        """Walk the gating chain back from the last job to finish, summing
+        its staging vs compute; submit latencies and waits between links are
+        the remainder of the wall clock, i.e. pure overhead."""
+        if not finish_t:
+            return
+        cur: str | None = max(finish_t, key=lambda n: (finish_t[n], n))
+        while cur is not None:
+            tr, dt = split[cur]
+            rep.critical_transfer_s += tr
+            rep.critical_compute_s += dt
+            cur = pred.get(cur)
+
+    # -- one job --------------------------------------------------------------
+
+    def _attempt(self, job: Job, results: dict, rep: RunReport, done: set[str]) -> tuple[float, int]:
+        """Execute one job with DAGMan retries; returns (measured compute
+        seconds, attempts).  Injected failures cost no simulated time (the
+        retry is immediate); exhaustion saves the rescue frontier and
+        raises."""
         attempts = 0
         while True:
             attempts += 1
@@ -164,6 +446,7 @@ class Engine:
             if self.faults.should_fail(job.name, attempts):
                 if attempts > job.retries:
                     job.status = "failed"
+                    self._save_rescue(done)
                     raise RuntimeError(f"job {job.name} exhausted retries ({job.retries})")
                 continue  # DAGMan retry
             t0 = time.perf_counter()
@@ -182,4 +465,16 @@ class Engine:
             job.status = "done"
             rep.compute_s += dt
             rep.job_times[job.name] = dt
-            return transfer + dt, attempts
+            return dt, attempts
+
+    def _execute(
+        self, job: Job, results: dict, rep: RunReport, done: set[str]
+    ) -> tuple[float, float, int]:
+        """Staged-mode wrapper: charge both staging legs and run the
+        attempts loop; returns (transfer, compute, attempts)."""
+        transfer = self.model.transfer_s(0, job.site, job.input_bytes) + self.model.transfer_s(
+            job.site, 0, job.output_bytes
+        )
+        rep.transfer_s += transfer
+        dt, attempts = self._attempt(job, results, rep, done)
+        return transfer, dt, attempts

@@ -6,13 +6,23 @@ The paper compares this "ideal" bound against grid execution and finds
 98% overhead for the cheap clustering workflow (Table 3); the engine
 reproduces the measured side with its simulated job-prep latencies.
 
-GRID5000_LINKS reproduces the paper's Table 2 (Mb/s - ms) exactly.
+Two estimators:
+  * ``estimate_stages`` — the paper's stage-barrier formula (matches the
+    engine's ``schedule="staged"`` mode);
+  * ``estimate_dag`` — the per-job critical-path bound (matches
+    ``schedule="async"``, where a job starts the moment its dependencies
+    complete; the paper's "partly overlapped by computations in the DAG").
+
+``GridModel`` reproduces the paper's Table 2 (Mb/s - ms) exactly with
+``links="grid5000"``; ``links="lan"`` models every pair as the local
+cluster link (the overhead-free comparison point), and ``bw_scale`` /
+``lat_scale`` degrade or improve the matrix uniformly for sweeps.
 """
 
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
+from typing import NamedTuple
 
 # Table 2: average bandwidths (Mb/s) and latencies (ms) among the sites.
 # Order: Orsay, Toulouse, Rennes, Nancy, Sophia.  None on the diagonal.
@@ -45,17 +55,27 @@ class GridModel:
     prep_latency_s: float = DAGMAN_PREP_S
     submit_latency_s: float = 3.0  # per-job scheduling/matchmaking cost
     n_sites: int = 5
+    # per-site worker slots for the async scheduler's contention model
+    # (a speculative duplicate needs a second free slot somewhere)
+    workers_per_site: int = 2
+    # link matrix: "grid5000" = the paper's Table 2; "lan" = every pair at
+    # local-cluster quality (the no-WAN comparison point for sweeps)
+    links: str = "grid5000"
+    bw_scale: float = 1.0  # uniform bandwidth multiplier (>1 = faster)
+    lat_scale: float = 1.0  # uniform latency multiplier (<1 = faster)
 
     def transfer_s(self, src: int, dst: int, nbytes: int) -> float:
         """Transfer time for nbytes between sites (Table 2 units)."""
         if nbytes <= 0:
             return 0.0
-        if src == dst:
+        if src == dst or self.links == "lan":
             bw, lat = LOCAL_BW_MBPS, LOCAL_LAT_MS
         else:
             i, j = src % len(SITES), dst % len(SITES)
             bw = BW_MBPS[i][j] or LOCAL_BW_MBPS
             lat = LAT_MS[i][j] or LOCAL_LAT_MS
+        bw *= self.bw_scale
+        lat *= self.lat_scale
         return lat / 1e3 + (nbytes * 8) / (bw * 1e6)
 
     def worst_transfer_s(self, nbytes: int) -> float:
@@ -83,6 +103,79 @@ def estimate_stages(stages: list[list[tuple[float, int, int, int]]], model: Grid
             worst = max(worst, t)
         total += worst
     return total
+
+
+class JobSpec(NamedTuple):
+    """One job of an analytical workflow estimate: the metadata the ideal
+    bound needs and nothing else (no callable, no status)."""
+
+    name: str
+    deps: tuple[str, ...] = ()
+    compute_s: float = 0.0
+    input_bytes: int = 0
+    output_bytes: int = 0
+    site: int = 0
+
+
+def _topo_fold(specs: list[JobSpec], fold) -> dict:
+    """Resolve every spec after its dependencies (iterative DFS — specs
+    from the SiteJob builders are topological, but don't rely on it) and
+    reduce with ``fold(spec, dep_values) -> value``."""
+    by_name = {s.name: s for s in specs}
+    out: dict = {}
+    for s in specs:
+        stack = [s.name]
+        while stack:
+            n = stack[-1]
+            if n in out:
+                stack.pop()
+                continue
+            spec = by_name[n]
+            pending = [d for d in spec.deps if d not in out]
+            if pending:
+                stack.extend(pending)
+                continue
+            out[n] = fold(spec, [out[d] for d in spec.deps])
+            stack.pop()
+    return out
+
+
+def estimate_dag(specs: list[JobSpec], model: GridModel) -> float:
+    """Ideal (analytical) execution time of a DAG workflow under per-job
+    overlap — the async counterpart of ``estimate_stages``.
+
+    Each job costs transfer_in + compute + transfer_out (transfers against
+    the submit site, as in the paper) and starts the instant its last
+    dependency finishes; no preparation, submission or slot-contention
+    cost.  The result is the critical-path length — a lower bound on any
+    schedule, and the baseline against which async-mode recovered overhead
+    is measured.
+    """
+
+    def finish(spec: JobSpec, dep_finishes: list[float]) -> float:
+        ideal = (
+            model.transfer_s(0, spec.site, spec.input_bytes)
+            + spec.compute_s
+            + model.transfer_s(spec.site, 0, spec.output_bytes)
+        )
+        return max(dep_finishes, default=0.0) + ideal
+
+    return max(_topo_fold(specs, finish).values(), default=0.0)
+
+
+def estimate_stages_from_specs(specs: list[JobSpec], model: GridModel) -> float:
+    """The paper's stage-barrier estimate applied to a DAG: jobs are
+    grouped into topological waves (longest-path depth) and each wave is a
+    stage of ``estimate_stages``.  This is the analytical counterpart of
+    the engine's ``schedule="staged"`` mode; the gap to ``estimate_dag``
+    is the overhead the barrier itself adds."""
+    depth = _topo_fold(specs, lambda spec, dep_depths: 1 + max(dep_depths, default=-1))
+    waves: dict[int, list[tuple[float, int, int, int]]] = {}
+    for s in specs:
+        waves.setdefault(depth[s.name], []).append(
+            (s.compute_s, s.input_bytes, s.output_bytes, s.site)
+        )
+    return estimate_stages([waves[w] for w in sorted(waves)], model)
 
 
 def overhead_pct(measured_s: float, estimated_s: float) -> float:

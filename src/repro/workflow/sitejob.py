@@ -23,6 +23,7 @@ from typing import Any, Callable
 import jax
 
 from repro.workflow.dag import DAG, Job, TimedResult
+from repro.workflow.overhead import JobSpec
 
 
 @dataclass
@@ -82,3 +83,46 @@ def build_dag(site_jobs: list[SiteJob], name: str = "site-jobs") -> DAG:
     for sj in site_jobs:
         dag.add(sj.to_job())
     return dag
+
+
+def replay_dag(specs: list[JobSpec], job_times: dict[str, float] | None = None) -> DAG:
+    """Rebuild a workflow topology as a pure-simulation DAG: trivial jobs
+    whose simulated compute is the recorded measurement (``job_times``,
+    falling back to each spec's ``compute_s``).  Replaying the same specs
+    and times through different engine schedules or link matrices isolates
+    the scheduling policy — identical DAG/model/times, zero timing noise —
+    which is how the sweep benchmark compares staged vs async fairly."""
+    times = job_times or {}
+    dag = DAG("replay")
+    for sp in specs:
+        sim = float(times.get(sp.name, sp.compute_s))
+        dag.job(
+            sp.name,
+            lambda *a: TimedResult(None, 0.0),
+            deps=list(sp.deps),
+            site=sp.site,
+            input_bytes=sp.input_bytes,
+            output_bytes=sp.output_bytes,
+            sim_compute_s=sim,
+        )
+    return dag
+
+
+def job_specs(site_jobs: list[SiteJob], job_times: dict[str, float] | None = None) -> list[JobSpec]:
+    """Strip SiteJobs down to the analytical ``overhead.JobSpec`` view,
+    with compute times taken from a run's measured ``RunReport.job_times``
+    — the inputs to ``estimate_dag`` / ``estimate_stages_from_specs``, so
+    the paper's measured-vs-estimated comparison is calibrated by the same
+    kernel timings that fed the simulated clock."""
+    times = job_times or {}
+    return [
+        JobSpec(
+            name=sj.name,
+            deps=tuple(sj.deps),
+            compute_s=float(times.get(sj.name, 0.0)),
+            input_bytes=sj.input_bytes,
+            output_bytes=sj.output_bytes,
+            site=sj.site,
+        )
+        for sj in site_jobs
+    ]

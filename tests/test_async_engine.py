@@ -1,0 +1,350 @@
+"""Event-driven async scheduler: per-site queues, barrier removal, rescue
+resume, retries, speculation determinism, the async<=staged invariant, and
+the split critical-path accounting (compute vs transfer) in RunReport."""
+
+import json
+
+import pytest
+
+from repro.workflow.dag import DAG, TimedResult
+from repro.workflow.engine import Engine
+from repro.workflow.faults import FaultInjector
+from repro.workflow.overhead import (
+    GridModel,
+    JobSpec,
+    estimate_dag,
+    estimate_stages_from_specs,
+)
+
+ZERO = dict(prep_latency_s=0, submit_latency_s=0)
+
+
+def sim(value=None):
+    """A job fn whose measured compute is exactly 0 (TimedResult), so the
+    simulated clock advances by sim_compute_s alone — deterministic."""
+    return lambda *a: TimedResult(value, 0.0)
+
+
+def zero_engine(**kw):
+    return Engine(model=GridModel(**ZERO, **kw.pop("model_kw", {})), schedule="async", **kw)
+
+
+def dag_from_specs(specs, times=None):
+    """Replay a workflow topology with simulated compute — identical DAG,
+    model and 'seed' (times) across schedule modes, zero timing noise."""
+    from repro.workflow.sitejob import replay_dag
+
+    return replay_dag(specs, times)
+
+
+class TestAsyncExecution:
+    def test_topological_execution_and_results(self):
+        calls = []
+        dag = DAG("diamond")
+        dag.job("a", lambda: calls.append("a") or 1)
+        dag.job("b", lambda a: calls.append("b") or a + 1, deps=["a"])
+        dag.job("c", lambda a: calls.append("c") or a + 2, deps=["a"])
+        dag.job("d", lambda b, c: calls.append("d") or b + c, deps=["b", "c"])
+        results = {}
+        rep = zero_engine().run(dag, results=results)
+        assert calls[0] == "a" and calls[-1] == "d"
+        assert results["d"] == 5
+        assert rep.schedule == "async"
+        assert rep.wall_s >= rep.critical_path_s
+
+    def test_per_site_queue_serializes_contention(self):
+        """3 jobs on one site with 1 worker slot run back-to-back; with 3
+        slots they run concurrently."""
+
+        def mk():
+            dag = DAG()
+            for i in range(3):
+                dag.job(f"j{i}", sim(), site=2, sim_compute_s=1.0)
+            return dag
+
+        one = Engine(
+            model=GridModel(**ZERO, workers_per_site=1), schedule="async"
+        ).run(mk())
+        three = Engine(
+            model=GridModel(**ZERO, workers_per_site=3), schedule="async"
+        ).run(mk())
+        assert one.wall_s == pytest.approx(3.0)
+        assert three.wall_s == pytest.approx(1.0)
+
+    def test_no_stage_barrier_beats_staged(self):
+        """A fast chain no longer waits for a slow sibling at each wave:
+        staged pays max-per-wave, async pays the true critical path."""
+        specs = [
+            JobSpec("a0", (), 1.0, site=1),
+            JobSpec("b0", (), 3.0, site=2),
+            JobSpec("a1", ("a0",), 3.0, site=1),
+            JobSpec("b1", ("b0",), 0.1, site=2),
+        ]
+        staged = Engine(model=GridModel(**ZERO)).run(dag_from_specs(specs))
+        async_ = zero_engine().run(dag_from_specs(specs))
+        assert staged.wall_s == pytest.approx(6.0)  # max(1,3) + max(3,0.1)
+        assert async_.wall_s == pytest.approx(4.0)  # the a-chain
+        assert async_.wall_s < staged.wall_s
+
+
+class TestAsyncFaults:
+    def test_retry_recovers(self):
+        dag = DAG()
+        dag.job("flaky", lambda: 42, retries=2)
+        eng = zero_engine(faults=FaultInjector(fail={"flaky": 2}))
+        results = {}
+        rep = eng.run(dag, results=results)
+        assert results["flaky"] == 42
+        assert dag.jobs["flaky"].attempts == 3
+        assert rep.retries == 2
+
+    def test_retry_exhaustion_raises(self):
+        dag = DAG()
+        dag.job("doomed", lambda: 1, retries=1)
+        eng = zero_engine(faults=FaultInjector(fail={"doomed": 5}))
+        with pytest.raises(RuntimeError, match="exhausted"):
+            eng.run(dag)
+
+    def test_rescue_resume_mid_dag(self, tmp_path):
+        """Crash mid-DAG: completed prefix is in the rescue file; the
+        resumed run re-executes only the unfinished suffix."""
+        rescue = tmp_path / "rescue.json"
+        calls = []
+
+        def mk():
+            dag = DAG()
+            dag.job("a", lambda: calls.append("a") or 1)
+            dag.job("b", lambda a: calls.append("b") or a + 1, deps=["a"])
+            dag.job("boom", lambda b: calls.append("boom") or b, deps=["b"], retries=0)
+            dag.job("tail", lambda x: calls.append("tail") or x + 10, deps=["boom"])
+            return dag
+
+        eng = zero_engine(faults=FaultInjector(fail={"boom": 5}), rescue_path=rescue)
+        with pytest.raises(RuntimeError, match="exhausted"):
+            eng.run(mk())
+        assert set(json.loads(rescue.read_text())) == {"a", "b"}
+        assert calls == ["a", "b"]
+
+        eng2 = zero_engine(rescue_path=rescue)
+        results = {"a": 1, "b": 2}  # rescued values re-injected by the driver
+        rep = eng2.run(mk(), results=results)
+        assert calls == ["a", "b", "boom", "tail"], "prefix must not re-execute"
+        assert results["tail"] == 12
+        assert rep.wall_s >= 0.0
+
+
+class TestAsyncSpeculation:
+    def mk(self):
+        dag = DAG()
+        for i in range(3):
+            dag.job(f"fast{i}", sim(), site=i, sim_compute_s=1.0)
+        dag.job("straggler", sim(), site=3, sim_compute_s=10.0)
+        return dag
+
+    def test_speculative_copy_wins(self):
+        rep = zero_engine(straggler_factor=3.0).run(self.mk())
+        assert rep.speculative == 1
+        # the duplicate finishes with the sample median, not 10 s
+        assert rep.wall_s == pytest.approx(1.0)
+        base = zero_engine().run(self.mk())
+        assert base.wall_s == pytest.approx(10.0)
+
+    def test_speculation_deterministic(self):
+        """Pure simulated compute: two runs replay identically — same
+        wall, same speculative count, same per-job times."""
+        a = zero_engine(straggler_factor=3.0).run(self.mk())
+        b = zero_engine(straggler_factor=3.0).run(self.mk())
+        assert a.wall_s == b.wall_s
+        assert a.speculative == b.speculative == 1
+        assert a.job_times == b.job_times
+        assert a.critical_compute_s == b.critical_compute_s
+        assert a.critical_transfer_s == b.critical_transfer_s
+
+    def test_early_straggler_detected_online(self):
+        """A straggler that STARTS before enough peers have been observed
+        must still be speculated once the evidence exists (detection is
+        re-evaluated at every later start, and the superseded finish event
+        must not stretch the wall)."""
+        dag = DAG()
+        dag.job("straggler", sim(), site=3, sim_compute_s=10.0)  # first!
+        for i in range(3):
+            dag.job(f"fast{i}", sim(), site=i, sim_compute_s=1.0)
+        rep = zero_engine(straggler_factor=3.0).run(dag)
+        assert rep.speculative == 1
+        assert rep.wall_s == pytest.approx(1.0)
+
+    def test_duplicate_pays_its_own_staging(self):
+        """The speculative copy stages the input to its slot — it cannot
+        'finish' before its input could physically arrive, and the
+        critical-path compute credit never goes negative."""
+        m = GridModel(**ZERO)
+        dag = DAG()
+        dag.job("heavy", sim(), site=1, input_bytes=10**8, sim_compute_s=100.0)
+        for i in range(3):
+            dag.job(f"fast{i}", sim(), site=2 + i, sim_compute_s=1.0)
+        rep = Engine(model=m, schedule="async", straggler_factor=3.0).run(dag)
+        assert rep.speculative == 1
+        # the duplicate's win still includes a full input staging leg
+        min_staging = min(
+            m.transfer_s(0, s, 10**8) for s in range(5) if s != 1
+        )
+        assert rep.wall_s >= min_staging
+        assert rep.critical_compute_s > 0
+        assert 0.0 <= rep.overhead_pct() <= 100.0
+
+    def test_deferred_speculation_fires_when_slot_frees(self):
+        """Detection blocked by a full grid is retried at slot release: the
+        straggler's duplicate launches as soon as capacity exists."""
+        dag = DAG()
+        dag.job("straggler", sim(), site=0, sim_compute_s=10.0)
+        for i in range(3):
+            dag.job(f"fast{i}", sim(), site=1, sim_compute_s=1.0)
+        rep = Engine(
+            model=GridModel(**ZERO, workers_per_site=1),
+            schedule="async",
+            straggler_factor=3.0,
+        ).run(dag)
+        assert rep.speculative == 1
+        # fast jobs serialize on site 1 (finish 1,2,3); at t=3 the slot
+        # frees, the duplicate runs the 1 s median -> done at 4, not 10
+        assert rep.wall_s == pytest.approx(4.0)
+
+    def test_no_speculation_when_grid_full(self):
+        """The duplicate needs a second free slot; with every slot busy the
+        straggler runs to completion."""
+        dag = DAG()
+        for i in range(4):
+            dag.job(f"j{i}", sim(), site=0, sim_compute_s=1.0)
+        dag.job("straggler", sim(), site=0, sim_compute_s=10.0)
+        rep = Engine(
+            model=GridModel(**ZERO, workers_per_site=1),
+            schedule="async",
+            straggler_factor=3.0,
+        ).run(dag)
+        assert rep.speculative == 0
+        assert rep.wall_s == pytest.approx(14.0)
+
+
+class TestAsyncLeqStagedInvariant:
+    """async wall <= staged wall on identical DAG/model/seed — replayed
+    with the applications' own smoke topologies and deterministic
+    simulated compute, under both submit models."""
+
+    def app_specs(self):
+        import jax
+
+        from repro.core.apriori import TransactionDB
+        from repro.core.gfm import gfm_site_jobs
+        from repro.core.vclustering import VClusterConfig, vcluster_site_jobs
+        from repro.data.synthetic import (
+            gaussian_mixture,
+            ibm_transactions,
+            split_sites,
+            split_transactions,
+        )
+        from repro.workflow.sitejob import job_specs
+
+        pts, _ = gaussian_mixture(0, 400, 2, 4, spread=12.0, sigma=0.5)
+        xs = split_sites(pts, 4, seed=1)
+        cfg = VClusterConfig(k_local=4, kmeans_iters=5)
+        vjobs = vcluster_site_jobs(jax.random.PRNGKey(0), xs, cfg)
+
+        dense = ibm_transactions(seed=2, n_tx=200, n_items=16, avg_tx_len=5, n_patterns=4)
+        sites = [TransactionDB.from_dense(s) for s in split_transactions(dense, 4, seed=0)]
+        gjobs = gfm_site_jobs(sites, 2, 0.1)
+        return {"vclustering": job_specs(vjobs), "gfm": job_specs(gjobs)}
+
+    @pytest.mark.parametrize("overlap", [False, True])
+    def test_async_wall_leq_staged(self, overlap):
+        for app, specs in self.app_specs().items():
+            times = {sp.name: 0.05 * (i % 3 + 1) for i, sp in enumerate(specs)}
+            walls = {}
+            for schedule in ("staged", "async"):
+                eng = Engine(model=GridModel(), overlap_prep=overlap, schedule=schedule)
+                walls[schedule] = eng.run(dag_from_specs(specs, times)).wall_s
+            assert walls["async"] <= walls["staged"] + 1e-9, (app, overlap, walls)
+
+
+class TestCriticalPathAccounting:
+    def test_transfer_separated_from_compute(self):
+        """The regression this fixes: the critical path's staging used to be
+        folded into a compute-named field, so overhead_pct undercounted
+        transfer.  Now staging is overhead."""
+        m = GridModel(**ZERO)
+        nbytes = 10**7
+        dag = DAG()
+        dag.job("move", sim(), site=1, input_bytes=nbytes, sim_compute_s=2.0)
+        rep = Engine(model=m).run(dag)  # staged
+        tr = m.transfer_s(0, 1, nbytes)
+        assert rep.critical_transfer_s == pytest.approx(tr)
+        assert rep.critical_compute_s == pytest.approx(2.0)
+        assert rep.max_stage_compute_s == pytest.approx(tr + 2.0)  # compat alias
+        assert rep.wall_s == pytest.approx(tr + 2.0)
+        assert rep.overhead_pct() == pytest.approx(100.0 * tr / (tr + 2.0))
+
+    def test_async_accounting_matches_staged_on_chain(self):
+        specs = [
+            JobSpec("a", (), 1.0, input_bytes=10**6, site=1),
+            JobSpec("b", ("a",), 2.0, output_bytes=10**6, site=2),
+        ]
+        staged = Engine(model=GridModel(**ZERO)).run(dag_from_specs(specs))
+        async_ = zero_engine().run(dag_from_specs(specs))
+        for rep in (staged, async_):
+            assert rep.critical_compute_s == pytest.approx(3.0)
+            assert rep.critical_transfer_s > 0
+        assert async_.wall_s == pytest.approx(staged.wall_s)
+
+
+class TestEstimateDag:
+    M = GridModel()
+
+    def test_chain_is_sum(self):
+        specs = [
+            JobSpec("a", (), 1.0),
+            JobSpec("b", ("a",), 2.0),
+            JobSpec("c", ("b",), 3.0),
+        ]
+        assert estimate_dag(specs, self.M) == pytest.approx(6.0)
+
+    def test_fork_join_takes_longest_branch(self):
+        specs = [
+            JobSpec("a", (), 1.0),
+            JobSpec("fast", ("a",), 1.0),
+            JobSpec("slow", ("a",), 5.0),
+            JobSpec("join", ("fast", "slow"), 1.0),
+        ]
+        assert estimate_dag(specs, self.M) == pytest.approx(7.0)
+
+    def test_order_independent(self):
+        specs = [
+            JobSpec("join", ("x", "y"), 1.0),
+            JobSpec("y", ("x",), 2.0),
+            JobSpec("x", (), 1.0),
+        ]
+        assert estimate_dag(specs, self.M) == pytest.approx(4.0)
+
+    def test_dag_bound_leq_staged_bound(self):
+        """Per-job overlap can only tighten the stage-barrier estimate."""
+        specs = [
+            JobSpec("a0", (), 1.0, 10**6, 0, 1),
+            JobSpec("b0", (), 3.0, 10**6, 0, 2),
+            JobSpec("a1", ("a0",), 3.0, 0, 10**5, 1),
+            JobSpec("b1", ("b0",), 0.5, 0, 10**5, 2),
+        ]
+        assert estimate_dag(specs, self.M) <= estimate_stages_from_specs(specs, self.M) + 1e-12
+
+    def test_lan_links_faster_than_grid5000(self):
+        specs = [JobSpec("a", (), 1.0, 10**7, 10**7, 2)]
+        wan = estimate_dag(specs, GridModel(links="grid5000"))
+        lan = estimate_dag(specs, GridModel(links="lan"))
+        assert lan < wan
+
+    def test_engine_wall_lower_bounded_by_estimate(self):
+        """The analytical bound is a true lower bound on the async engine's
+        simulated wall (which adds prep/submit/contention)."""
+        specs = [
+            JobSpec("a", (), 1.0, 10**6, 0, 1),
+            JobSpec("b", ("a",), 2.0, 0, 10**5, 2),
+        ]
+        rep = Engine(model=GridModel(), schedule="async").run(dag_from_specs(specs))
+        assert rep.wall_s >= estimate_dag(specs, GridModel()) - 1e-9

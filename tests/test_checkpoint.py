@@ -1,8 +1,5 @@
 """Checkpointer: roundtrip, atomicity, async, retention, elastic restore."""
 
-import json
-import time
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -82,7 +79,6 @@ class TestAsyncAndRetention:
         continue — the stream is pure in (seed, step) so the resumed run
         produces the identical state as an uninterrupted one."""
         from repro.models.config import ModelConfig
-        from repro.models import transformer as T
         from repro.optim.adamw import AdamWConfig
         from repro.train.steps import make_train_step, materialize_state
         from repro.data.pipeline import TokenStream

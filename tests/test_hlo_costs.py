@@ -4,7 +4,6 @@ modules and against hand-computed values on scanned ones."""
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.compat import cost_analysis_dict

@@ -14,8 +14,6 @@ from repro.core.apriori import (
     bruteforce_frequent,
     count_supports,
     local_apriori,
-    pack_bool_matrix,
-    pack_itemsets,
 )
 from repro.core.fdm import fdm_mine
 from repro.core.gfm import gfm_mine

@@ -1,0 +1,108 @@
+"""compare_baseline: the CI perf-regression gate's decision logic on
+synthetic sweep payloads (no jax, no benchmark run)."""
+
+import copy
+import os
+import sys
+
+sys.path.insert(0, os.path.abspath(os.path.join(os.path.dirname(__file__), "..")))
+from benchmarks.compare_baseline import compare  # noqa: E402
+
+
+def payload():
+    cell = {
+        "app": "gfm",
+        "n_sites": 4,
+        "links": "grid5000",
+        "compute_scale": 1,
+        "schedule": "staged",
+        "wall_s": 325.0,
+        "overhead_pct": 99.9,
+        "prep_s": 295.0,
+        "submit_s": 30.0,
+        "transfer_s": 1.5,
+    }
+    acell = dict(cell, schedule="async", wall_s=307.0, submit_s=30.0)
+    return {
+        "cells": [cell, acell],
+        "comparisons": [
+            {
+                "app": "gfm",
+                "n_sites": 4,
+                "links": "grid5000",
+                "compute_scale": 1,
+                "wall_staged_s": 325.0,
+                "wall_async_s": 307.0,
+            }
+        ],
+    }
+
+
+class TestCompare:
+    def test_identical_passes(self):
+        failures, notes = compare(payload(), payload())
+        assert failures == [] and notes == []
+
+    def test_simulated_component_regression_fails(self):
+        cand = payload()
+        cand["cells"][0]["submit_s"] *= 1.10  # > 1% on a simulated component
+        failures, _ = compare(payload(), cand)
+        assert any("submit_s" in f for f in failures)
+
+    def test_wall_within_band_passes(self):
+        cand = payload()
+        cand["cells"][0]["wall_s"] *= 1.10  # within the 30% wall band
+        failures, _ = compare(payload(), cand)
+        assert failures == []
+
+    def test_wall_regression_fails(self):
+        cand = payload()
+        cand["cells"][0]["wall_s"] *= 1.50
+        failures, _ = compare(payload(), cand)
+        assert any("wall_s" in f for f in failures)
+
+    def test_improvement_is_note_not_failure(self):
+        cand = payload()
+        cand["cells"][0]["wall_s"] *= 0.5
+        cand["cells"][0]["submit_s"] *= 0.5
+        failures, notes = compare(payload(), cand)
+        assert failures == []
+        assert any("refresh the baseline" in n for n in notes)
+
+    def test_missing_cell_fails(self):
+        cand = copy.deepcopy(payload())
+        cand["cells"] = cand["cells"][:1]
+        failures, _ = compare(payload(), cand)
+        assert any("missing" in f for f in failures)
+
+    def test_async_invariant_violation_fails(self):
+        cand = payload()
+        cand["comparisons"][0]["wall_async_s"] = 340.0
+        failures, _ = compare(payload(), cand)
+        assert any("invariant" in f for f in failures)
+
+    def test_missing_comparisons_fail(self):
+        """A candidate that silently drops its comparison rows must not
+        pass with the invariant untested."""
+        cand = payload()
+        cand["comparisons"] = []
+        failures, _ = compare(payload(), cand)
+        assert any("comparison row missing" in f for f in failures)
+
+    def test_overhead_pct_band(self):
+        cand = payload()
+        cand["cells"][0]["overhead_pct"] = 99.9 + 6.0  # beyond 5-point band
+        failures, _ = compare(payload(), cand)
+        assert any("overhead_pct" in f for f in failures)
+
+    def test_overhead_pct_not_gated_at_scaled_cells(self):
+        """Compute-scale multipliers amplify calibration noise in
+        overhead_pct; only the x1 cells are banded."""
+        base, cand = payload(), payload()
+        for p in (base, cand):
+            for cell in p["cells"]:
+                cell["compute_scale"] = 50
+            p["comparisons"][0]["compute_scale"] = 50
+        cand["cells"][0]["overhead_pct"] = 99.9 + 6.0
+        failures, _ = compare(base, cand)
+        assert failures == []

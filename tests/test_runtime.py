@@ -191,7 +191,9 @@ class TestFDMRuntime:
         (regression: the job path used to skip the per-site call that
         fdm_mine ledgered, or vice versa)."""
         dense = ibm_transactions(seed=2, n_tx=400, n_items=20, avg_tx_len=5, n_patterns=6)
-        mk = lambda: [TransactionDB.from_dense(dense[:3]), TransactionDB.from_dense(dense[3:])]
+        def mk():
+            return [TransactionDB.from_dense(dense[:3]), TransactionDB.from_dense(dense[3:])]
+
         ref = fdm_mine(mk(), 3, 0.1)
         rt = GridRuntime(engine=fast_engine(), count_backend="jnp")
         run = rt.run_fdm(mk(), 3, 0.1)
@@ -208,6 +210,52 @@ class TestFDMRuntime:
         _, sites2 = tx_sites()
         f = rt.run_fdm(sites2, 3, 0.08)
         assert g.result.comm.rounds < f.result.comm.rounds
+
+
+class TestAsyncRuntime:
+    """schedule="async" threaded through GridRuntime: identical mining
+    results, wall no worse than staged, analytical estimates attached."""
+
+    def test_vclustering_async_matches_pooled_reference(self):
+        xs = cluster_sites()
+        rt = GridRuntime(engine=fast_engine(), sync="pooled", use_kernel=False, schedule="async")
+        run = rt.run_vclustering(jax.random.PRNGKey(0), xs, CFG)
+        ref = vcluster_pooled(jax.random.PRNGKey(0), jnp.asarray(xs), CFG)
+        assert run.schedule == "async"
+        assert int(run.result.merged.n_global) == int(ref.merged.n_global)
+        assert np.array_equal(np.asarray(run.result.labels), np.asarray(ref.labels))
+
+    def test_gfm_async_matches_staged(self):
+        _, sites = tx_sites()
+        arun = GridRuntime(engine=fast_engine(), count_backend="jnp", schedule="async").run_gfm(
+            sites, 3, 0.08
+        )
+        _, sites2 = tx_sites()
+        srun = GridRuntime(engine=fast_engine(), count_backend="jnp").run_gfm(sites2, 3, 0.08)
+        assert arun.schedule == "async" and srun.schedule == "staged"
+        assert arun.result.frequent == srun.result.frequent
+        assert arun.result.comm.rounds == srun.result.comm.rounds == 2
+
+    def test_fdm_async_matches_in_process_baseline(self):
+        _, sites = tx_sites()
+        run = GridRuntime(engine=fast_engine(), count_backend="jnp", schedule="async").run_fdm(
+            sites, 3, 0.08
+        )
+        _, sites2 = tx_sites()
+        ref = fdm_mine(sites2, 3, 0.08)
+        assert run.result.frequent == ref.frequent
+        assert run.result.comm.rounds == ref.comm.rounds
+
+    def test_estimates_attached_and_bounded(self):
+        """The measured-calibrated analytical bounds ride on RuntimeRun and
+        lower-bound the simulated wall (paper measured-vs-estimated)."""
+        _, sites = tx_sites()
+        run = GridRuntime(engine=fast_engine(), count_backend="jnp", schedule="async").run_gfm(
+            sites, 3, 0.08
+        )
+        assert 0 < run.estimated_s <= run.estimated_staged_s + 1e-9
+        assert run.report.wall_s >= run.estimated_s - 1e-6
+        assert 0.0 <= run.est_overhead_pct() <= 100.0
 
 
 class TestBenchRuntime:

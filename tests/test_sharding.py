@@ -1,13 +1,11 @@
 """Logical-axis sharding rules: divisibility fallbacks, axis-reuse
 prevention, spec building — pure-host tests (AbstractMesh, no devices)."""
 
-import jax
-import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.compat import abstract_mesh
-from repro.sharding import BASELINE, GRIDLOCAL, Rules, ShapeAxes, logical_to_pspec
+from repro.sharding import BASELINE, GRIDLOCAL, ShapeAxes, logical_to_pspec
 
 MESH1 = abstract_mesh((16, 16), ("data", "model"))
 MESH2 = abstract_mesh((2, 16, 16), ("pod", "data", "model"))

@@ -4,17 +4,14 @@ The variance-based merge is only correct because SSE is additive under
 the s(i,j) formula; these tests pin that invariant down exactly.
 """
 
-import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 try:
     from hypothesis import given, settings, strategies as st
 except ImportError:  # hermetic env: deterministic shim, no shrinking
     from repro.testing import given, settings, strategies as st
 
 from repro.core.stats import (
-    SuffStats,
     merge_cost,
     merge_stats,
     pairwise_sq_dists,

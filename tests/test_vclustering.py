@@ -7,14 +7,10 @@ import os
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core.kmeans import gap_statistic, kmeans
-from repro.core.stats import stack_site_stats
 from repro.core.vclustering import (
     VClusterConfig,
-    merge_subclusters,
-    paper_threshold,
     vcluster_pooled,
 )
 from repro.data.synthetic import gaussian_mixture, split_sites
@@ -54,15 +50,13 @@ class TestDistributedClustering:
         # purity: points near each true center share one global label
         labels = np.asarray(res.labels).reshape(-1)
         flat = xs.reshape(-1, 2)
-        from repro.data.synthetic import gaussian_mixture as gm
-
         rng_centers = np.random.default_rng(0).uniform(-12, 12, (4, 2))
         for c in rng_centers:
             near = np.linalg.norm(flat - c, axis=1) < 2.5
             if near.sum() < 10:
                 continue
-            l = labels[near]
-            purity = (l == np.bincount(l).argmax()).mean()
+            near_labels = labels[near]
+            purity = (near_labels == np.bincount(near_labels).argmax()).mean()
             assert purity > 0.95, (c, purity)
 
     def test_comm_is_stats_only(self):
@@ -96,8 +90,8 @@ class TestDistributedClustering:
             labels = np.asarray(res.labels).reshape(-1)
             flat = np.asarray(xs).reshape(-1, xs.shape[-1])
             tot = 0.0
-            for l in np.unique(labels):
-                pts_l = flat[labels == l]
+            for lbl in np.unique(labels):
+                pts_l = flat[labels == lbl]
                 tot += ((pts_l - pts_l.mean(0)) ** 2).sum()
             return tot
 

@@ -3,7 +3,7 @@ restart, straggler speculation, and the paper's Table 3 overhead model."""
 
 import pytest
 
-from repro.workflow.dag import DAG, Job
+from repro.workflow.dag import DAG
 from repro.workflow.engine import Engine
 from repro.workflow.faults import FaultInjector
 from repro.workflow.overhead import (
