@@ -1,5 +1,6 @@
-"""Overhead-sweep study: site-count x link-matrix x schedule-mode over
-both mining applications, with real-kernel-calibrated job times.
+"""Overhead-sweep study: site-count x link-matrix x compute-scale x
+schedule-mode x placement-policy over both mining applications, with
+real-kernel-calibrated job times.
 
 This reproduces the paper's Table 3 measured-vs-estimated overhead
 comparison (the 295 s DAGMan preparation, serial per-job matchmaking and
@@ -9,25 +10,38 @@ recovers by overlapping submission with computation — the optimisation
 the paper suggests ("partly overlapped by computations in the DAG") —
 in the style of the companion study arXiv:1903.03008's site-count sweeps.
 
+The placement axis runs the async scheduler under every matchmaking
+policy (``fixed`` a-priori sites vs ``round_robin`` / seeded ``random``
+/ ``greedy_eta`` adaptive placement); the ``skewed`` link variant
+(per-site degraded Table 2 matrix + heterogeneous per-site compute
+speeds, ``GridModel.skewed()``) is the scenario where matchmaking
+dominates (arXiv:1412.2673), and the CI gate requires ``greedy_eta``
+wall <= ``fixed`` wall there.  Staged cells keep fixed placement — they
+are the Table 3 reproduction.
+
 Methodology: each (application, site count) point is CALIBRATED by one
 real run through ``GridRuntime`` (jitted site-local compute; per-job
-device times recorded), then every links x schedule cell REPLAYS the
-captured DAG and measured times through the engine deterministically.
-Replaying isolates the scheduling policy — identical DAG, model and job
-times across cells, zero timing noise — so staged-vs-async deltas are
-exact and the CI regression gate is stable across hosts.
+device times recorded), then every links x schedule x placement cell
+REPLAYS the captured DAG and measured times through the engine
+deterministically.  Replaying isolates the scheduling policy — identical
+DAG, model and job times across cells, zero timing noise — so
+staged-vs-async and fixed-vs-adaptive deltas are exact and the CI
+regression gate is stable across hosts.
 
 Writes ``BENCH_sweep.json``::
 
     {"meta":  {...},
-     "cells": [{"app", "n_sites", "links", "schedule", "wall_s",
-                "compute_s", "critical_compute_s", "critical_transfer_s",
-                "prep_s", "submit_s", "transfer_s", "overhead_pct",
-                "estimated_s", "estimated_staged_s", "est_overhead_pct",
-                "n_jobs"}, ...],
+     "cells": [{"app", "n_sites", "links", "schedule", "placement",
+                "wall_s", "compute_s", "critical_compute_s",
+                "critical_transfer_s", "prep_s", "submit_s", "transfer_s",
+                "overhead_pct", "estimated_s", "estimated_staged_s",
+                "est_overhead_pct", "n_jobs"}, ...],
      "comparisons": [{"app", "n_sites", "links", "wall_staged_s",
                       "wall_async_s", "recovered_s",
                       "recovered_pct_of_overhead"}, ...],
+     "placement_comparisons": [{"app", "n_sites", "links",
+                                "compute_scale", "wall_fixed_s",
+                                "wall_greedy_eta_s", "recovered_s"}, ...],
      "table3":  [{"app", "n_sites", "measured_s", "estimated_s",
                   "est_overhead_pct"}, ...]}
 
@@ -50,9 +64,13 @@ import jax
 
 from benchmarks.common import row
 from repro.workflow.overhead import overhead_pct
+from repro.workflow.placement import POLICIES
 
-LINK_VARIANTS = ("grid5000", "lan")
+LINK_VARIANTS = ("grid5000", "lan", "skewed")
 SCHEDULES = ("staged", "async")
+# the placement axis applies to the async scheduler (matchmaking is what
+# the event-driven engine models); staged cells pin placement="fixed"
+PLACEMENTS = POLICIES  # ("fixed", "round_robin", "random", "greedy_eta")
 # what-if compute scaling of the calibrated job times (sim_compute_s
 # replay): x1 is the paper's cheap-mining regime where overheads dominate
 # and there is nothing to overlap; larger factors approach paper-scale
@@ -71,6 +89,7 @@ def _cell(
         "links": links,
         "compute_scale": scale,
         "schedule": rep.schedule,
+        "placement": rep.placement,
         "wall_s": rep.wall_s,
         "compute_s": rep.compute_s,
         "critical_compute_s": rep.critical_compute_s,
@@ -144,29 +163,52 @@ def run(smoke: bool = False, out: str = "BENCH_sweep.json", use_kernel: bool | N
     scales = COMPUTE_SCALES if smoke else COMPUTE_SCALES_FULL
     cells: list[dict] = []
     comparisons: list[dict] = []
+    placement_comparisons: list[dict] = []
     for app in ("vclustering", "gfm"):
         for n_sites in site_counts:
             specs = calibrate(app, n_sites)
             for links in LINK_VARIANTS:
-                model = GridModel(links=links)
+                # "skewed" is the heterogeneous grid: degraded per-site
+                # links AND per-site compute speeds — the matchmaking
+                # scenario the placement gate runs on
+                model = GridModel.skewed() if links == "skewed" else GridModel(links=links)
                 for scale in scales:
                     scaled = [sp._replace(compute_s=sp.compute_s * scale) for sp in specs]
-                    est_dag = estimate_dag(scaled, model)
-                    est_staged = estimate_stages_from_specs(scaled, model)
                     per_schedule: dict[str, dict] = {}
+                    per_placement: dict[str, dict] = {}
                     for schedule in SCHEDULES:
-                        # deterministic replay: paper-faithful grid (full
-                        # DAGMan prep, serial matchmaking), calibrated times
-                        eng = Engine(model=model, overlap_prep=False, schedule=schedule)
-                        rep = eng.run(replay_dag(scaled))
-                        cell = _cell(rep, app, n_sites, links, scale, est_dag, est_staged)
-                        cells.append(cell)
-                        per_schedule[schedule] = cell
-                        row(
-                            f"sweep_{app}_s{n_sites}_{links}_x{scale}_{schedule}",
-                            cell["wall_s"],
-                            f"overhead={cell['overhead_pct']:.1f}%;est={cell['estimated_s']:.2f}s",
-                        )
+                        # the placement axis applies to async (the
+                        # matchmaker); staged is the Table 3 reproduction
+                        for placement in PLACEMENTS if schedule == "async" else ("fixed",):
+                            # deterministic replay: paper-faithful grid
+                            # (full DAGMan prep, serial matchmaking),
+                            # calibrated times
+                            eng = Engine(
+                                model=model,
+                                overlap_prep=False,
+                                schedule=schedule,
+                                placement=placement,
+                            )
+                            rep = eng.run(replay_dag(scaled))
+                            # bounds priced at the sites the policy chose
+                            placed = [
+                                sp._replace(site=rep.placements.get(sp.name, sp.site))
+                                for sp in scaled
+                            ]
+                            est_dag = estimate_dag(placed, model)
+                            est_staged = estimate_stages_from_specs(placed, model)
+                            cell = _cell(rep, app, n_sites, links, scale, est_dag, est_staged)
+                            cells.append(cell)
+                            if placement == "fixed":
+                                per_schedule[schedule] = cell
+                            if schedule == "async":
+                                per_placement[placement] = cell
+                            row(
+                                f"sweep_{app}_s{n_sites}_{links}_x{scale}_{schedule}_{placement}",
+                                cell["wall_s"],
+                                f"overhead={cell['overhead_pct']:.1f}%;"
+                                f"est={cell['estimated_s']:.2f}s",
+                            )
                     staged, async_ = per_schedule["staged"], per_schedule["async"]
                     recovered = staged["wall_s"] - async_["wall_s"]
                     overhead = staged["wall_s"] - staged["estimated_staged_s"]
@@ -182,6 +224,18 @@ def run(smoke: bool = False, out: str = "BENCH_sweep.json", use_kernel: bool | N
                             "recovered_pct_of_overhead": (
                                 100.0 * recovered / overhead if overhead > 0 else 0.0
                             ),
+                        }
+                    )
+                    fixed, greedy = per_placement["fixed"], per_placement["greedy_eta"]
+                    placement_comparisons.append(
+                        {
+                            "app": app,
+                            "n_sites": n_sites,
+                            "links": links,
+                            "compute_scale": scale,
+                            "wall_fixed_s": fixed["wall_s"],
+                            "wall_greedy_eta_s": greedy["wall_s"],
+                            "recovered_s": fixed["wall_s"] - greedy["wall_s"],
                         }
                     )
 
@@ -210,12 +264,14 @@ def run(smoke: bool = False, out: str = "BENCH_sweep.json", use_kernel: bool | N
             "site_counts": site_counts,
             "links": list(LINK_VARIANTS),
             "schedules": list(SCHEDULES),
+            "placements": list(PLACEMENTS),
             "compute_scales": list(scales),
             "clustering_shape": [n_pts, dim, k_local],
             "itemsets_shape": [n_tx, n_items, k_items, minsup],
         },
         "cells": cells,
         "comparisons": comparisons,
+        "placement_comparisons": placement_comparisons,
         "table3": table3,
     }
     if out:

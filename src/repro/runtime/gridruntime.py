@@ -46,6 +46,7 @@ from repro.workflow.overhead import (
     estimate_stages_from_specs,
     overhead_pct,
 )
+from repro.workflow.placement import resolve_placement
 from repro.workflow.sitejob import job_specs
 
 
@@ -60,9 +61,11 @@ class RuntimeRun:
     measured: dict[str, float] = field(default_factory=dict)
     sync_mode: str = "pooled"  # how the single synchronization executed
     schedule: str = "staged"  # which engine scheduler executed the DAG
+    placement: str = "fixed"  # which matchmaking policy placed the jobs
     # the analytical view of the DAG that was actually executed (deps,
-    # bytes, sites, measured compute) — feed to overhead.estimate_* or
-    # sitejob.replay_dag; the sweep benchmark replays exactly these
+    # bytes, the sites the policy actually chose, measured compute) —
+    # feed to overhead.estimate_* or sitejob.replay_dag; the sweep
+    # benchmark replays exactly these
     specs: list = field(default_factory=list)
     # analytical bounds (paper §5.2.2), calibrated by the measured job
     # times: per-job critical path (the async ideal) and the stage-barrier
@@ -98,24 +101,35 @@ class GridRuntime:
         use_kernel: bool = True,
         count_backend: str = "kernel",
         schedule: str | None = None,
+        placement: str | None = None,
     ):
         if sync not in ("auto", "shard_map", "pooled"):
             raise ValueError(f"unknown sync mode {sync!r}")
-        # ``schedule`` threads the engine's scheduler mode ("staged" |
-        # "async") through the runtime; None keeps the given engine's own
-        # mode (or the Engine default) untouched.  A caller-supplied
-        # engine is never mutated — a differing schedule gets an
-        # equivalent engine with that mode.
+        # ``schedule`` / ``placement`` thread the engine's scheduler mode
+        # ("staged" | "async") and matchmaking policy ("fixed" |
+        # "round_robin" | "random" | "greedy_eta") through the runtime;
+        # None keeps the given engine's own settings (or the Engine
+        # defaults) untouched.  A caller-supplied engine is never mutated
+        # — a differing schedule/placement gets an equivalent engine.
         if engine is None:
-            engine = Engine(model=GridModel(), overlap_prep=True, schedule=schedule or "staged")
-        elif schedule is not None and engine.schedule != schedule:
+            engine = Engine(
+                model=GridModel(),
+                overlap_prep=True,
+                schedule=schedule or "staged",
+                placement=placement or "fixed",
+            )
+        elif (schedule is not None and engine.schedule != schedule) or (
+            placement is not None and resolve_placement(engine.placement).name != placement
+        ):
             engine = Engine(
                 model=engine.model,
                 faults=engine.faults,
                 rescue_path=engine.rescue_path,
                 overlap_prep=engine.overlap_prep,
                 straggler_factor=engine.straggler_factor,
-                schedule=schedule,
+                schedule=schedule or engine.schedule,
+                placement=placement if placement is not None else engine.placement,
+                trace=engine.trace,
             )
         self.engine = engine
         self.mesh = mesh
@@ -173,8 +187,13 @@ class GridRuntime:
     # -- applications --------------------------------------------------------
 
     def _finish_run(self, jobs, rep: RunReport, result, measured, sync_mode: str) -> RuntimeRun:
-        """Attach the measured-time-calibrated analytical bounds to a run."""
+        """Attach the measured-time-calibrated analytical bounds to a run.
+        The specs carry the sites the placement policy ACTUALLY chose
+        (``rep.placements``), so the bounds price the executed assignment
+        rather than the builders' pre-assigned sites."""
         specs = job_specs(jobs, rep.job_times)
+        if rep.placements:
+            specs = [sp._replace(site=rep.placements.get(sp.name, sp.site)) for sp in specs]
         model = self.engine.model
         return RuntimeRun(
             result=result,
@@ -182,6 +201,7 @@ class GridRuntime:
             measured=measured,
             sync_mode=sync_mode,
             schedule=rep.schedule,
+            placement=rep.placement,
             specs=specs,
             estimated_s=estimate_dag(specs, model),
             estimated_staged_s=estimate_stages_from_specs(specs, model),

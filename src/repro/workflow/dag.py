@@ -55,10 +55,17 @@ class DAG:
 
     def add(self, job: Job) -> Job:
         if job.name in self.jobs:
-            raise ValueError(f"duplicate job {job.name!r}")
+            raise ValueError(
+                f"duplicate job {job.name!r} in DAG {self.name!r}: job names must be unique"
+            )
+        if job.name in job.deps:
+            raise ValueError(f"job {job.name!r} depends on itself (cycle: {job.name} -> {job.name})")
         for d in job.deps:
             if d not in self.jobs:
-                raise ValueError(f"job {job.name!r} depends on unknown {d!r}")
+                raise ValueError(
+                    f"job {job.name!r} depends on unknown {d!r} "
+                    f"(jobs must be added in topological order)"
+                )
         self.jobs[job.name] = job
         return job
 
@@ -79,18 +86,33 @@ class DAG:
         return [j for j in self.jobs.values() if j.status == "failed"]
 
     def validate_acyclic(self) -> None:
-        seen: dict[str, int] = {}
-
-        def visit(n: str):
-            st = seen.get(n, 0)
-            if st == 1:
-                raise ValueError(f"cycle through {n!r}")
-            if st == 2:
-                return
-            seen[n] = 1
-            for d in self.jobs[n].deps:
-                visit(d)
-            seen[n] = 2
-
-        for n in self.jobs:
-            visit(n)
+        """Reject cyclic dependency graphs with the offending cycle
+        spelled out (``cycle: a -> b -> a``), and unknown dependency
+        names with the job that references them.  Iterative DFS — a
+        10k-job chain must not hit the recursion limit."""
+        seen: dict[str, int] = {}  # 0/absent = white, 1 = on path, 2 = done
+        for root in self.jobs:
+            if seen.get(root) == 2:
+                continue
+            path: list[str] = []
+            stack: list[tuple[str, bool]] = [(root, False)]
+            while stack:
+                n, leaving = stack.pop()
+                if leaving:
+                    seen[n] = 2
+                    path.pop()
+                    continue
+                st = seen.get(n, 0)
+                if st == 2:
+                    continue
+                if st == 1:
+                    cycle = path[path.index(n):] + [n]
+                    raise ValueError(f"dependency cycle in DAG {self.name!r}: {' -> '.join(cycle)}")
+                seen[n] = 1
+                path.append(n)
+                stack.append((n, True))
+                for d in self.jobs[n].deps:
+                    if d not in self.jobs:
+                        raise ValueError(f"job {n!r} depends on unknown {d!r}")
+                    if seen.get(d, 0) != 2:
+                        stack.append((d, False))

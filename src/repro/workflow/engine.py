@@ -54,6 +54,11 @@ from pathlib import Path
 from repro.workflow.dag import DAG, Job, TimedResult
 from repro.workflow.faults import FaultInjector
 from repro.workflow.overhead import GridModel
+from repro.workflow.placement import (
+    PlacementPolicy,
+    PlacementRequest,
+    resolve_placement,
+)
 
 SCHEDULES = ("staged", "async")
 
@@ -76,6 +81,11 @@ class RunReport:
     speculative: int = 0
     schedule: str = "staged"
     job_times: dict = field(default_factory=dict)
+    # matchmaking: which policy placed the jobs, and where each job
+    # actually ran (job name -> site) — for fixed placement this echoes
+    # the DAG's pre-assigned sites
+    placement: str = "fixed"
+    placements: dict = field(default_factory=dict)
 
     @property
     def critical_path_s(self) -> float:
@@ -105,15 +115,27 @@ class Engine:
         overlap_prep: bool = False,
         straggler_factor: float = 0.0,  # 0 = no speculation
         schedule: str = "staged",
+        placement: str | PlacementPolicy = "fixed",
+        trace: list | None = None,
     ):
         if schedule not in SCHEDULES:
             raise ValueError(f"unknown schedule {schedule!r}; expected one of {SCHEDULES}")
+        resolve_placement(placement)  # fail fast on unknown policy names
         self.model = model or GridModel()
         self.faults = faults or FaultInjector()
         self.rescue_path = Path(rescue_path) if rescue_path else None
         self.overlap_prep = overlap_prep
         self.straggler_factor = straggler_factor
         self.schedule = schedule
+        self.placement = placement
+        # optional observability hook: when a list is given, both
+        # schedulers append (t, kind, job, site, site_busy_after) records
+        # — the scheduler-invariant test suite audits these
+        self.trace = trace
+
+    def _trace(self, t: float, kind: str, job: str, site: int, busy: int) -> None:
+        if self.trace is not None:
+            self.trace.append((t, kind, job, site, busy))
 
     # -- rescue bookkeeping --------------------------------------------------
 
@@ -139,12 +161,20 @@ class Engine:
         rep = self.run(build_dag(site_jobs, name), results=results)
         return rep, results
 
-    def run(self, dag: DAG, results: dict | None = None, schedule: str | None = None) -> RunReport:
+    def run(
+        self,
+        dag: DAG,
+        results: dict | None = None,
+        schedule: str | None = None,
+        placement: str | PlacementPolicy | None = None,
+    ) -> RunReport:
         schedule = schedule or self.schedule
         if schedule not in SCHEDULES:
             raise ValueError(f"unknown schedule {schedule!r}; expected one of {SCHEDULES}")
+        policy = resolve_placement(placement if placement is not None else self.placement)
+        policy.reset()  # per-run state (RNG, round-robin cursor)
         dag.validate_acyclic()
-        rep = RunReport(schedule=schedule)
+        rep = RunReport(schedule=schedule, placement=policy.name)
         results = results if results is not None else {}
 
         # workflow preparation (the 295 s DAGMan latency).  With
@@ -161,14 +191,60 @@ class Engine:
                 dag.jobs[name].status = "done"
 
         if schedule == "async":
-            self._run_async(dag, results, rep, done)
+            self._run_async(dag, results, rep, done, policy)
         else:
-            self._run_staged(dag, results, rep, done)
+            self._run_staged(dag, results, rep, done, policy)
         return rep
+
+    # -- matchmaking ----------------------------------------------------------
+
+    @staticmethod
+    def _median(samples: list[float]) -> float:
+        return sorted(samples)[len(samples) // 2] if samples else 0.0
+
+    def _request(
+        self,
+        job: Job,
+        now: float,
+        sites: list[int],
+        workers: int,
+        site_busy: dict,
+        queue_depth: dict,
+        busy_until: dict,
+        samples: list[float],
+    ) -> PlacementRequest:
+        """Snapshot the grid for one placement decision.  The expected
+        compute is the job's own simulated time when declared (replay
+        DAGs carry calibrated times there), else the running median of
+        scheduled compute observed so far — the matchmaker cannot see a
+        measurement that has not happened yet."""
+        med = self._median(samples)
+        expected = job.sim_compute_s if job.sim_compute_s > 0 else med
+        return PlacementRequest(
+            name=job.name,
+            fixed_site=job.site,
+            input_bytes=job.input_bytes,
+            output_bytes=job.output_bytes,
+            expected_compute_s=expected,
+            now=now,
+            model=self.model,
+            sites=sites,
+            workers=workers,
+            site_busy=site_busy,
+            queue_depth=queue_depth,
+            busy_until=busy_until,
+            service_est_s=med,
+        )
 
     # -- staged (stage-barrier) scheduler -------------------------------------
 
-    def _run_staged(self, dag: DAG, results: dict, rep: RunReport, done: set[str]) -> None:
+    def _run_staged(
+        self, dag: DAG, results: dict, rep: RunReport, done: set[str], policy: PlacementPolicy
+    ) -> None:
+        model = self.model
+        workers = max(1, model.workers_per_site)
+        sites = policy.candidate_sites([j.site for j in dag.jobs.values()], model)
+        samples: list[float] = []  # scheduled compute of completed jobs
         clock = rep.prep_s
 
         while not dag.done():
@@ -176,6 +252,18 @@ class Engine:
             if not stage:
                 failed = dag.failed()
                 raise RuntimeError(f"workflow stuck; failed jobs: {[j.name for j in failed]}")
+
+            # matchmaking: place every job of the stage before it runs.
+            # The stage itself has no slot limit (the barrier model runs
+            # the whole frontier in parallel), so contention is priced
+            # through the per-stage assignment count alone.
+            stage_load: dict[int, int] = {}
+            for job in stage:
+                job.site = policy.place(
+                    self._request(job, clock, sites, workers, stage_load, {}, {}, samples)
+                )
+                rep.placements[job.name] = job.site
+                stage_load[job.site] = stage_load.get(job.site, 0) + 1
 
             # submit latency: serial per job unless overlapped
             submit = self.model.submit_latency_s * len(stage)
@@ -188,7 +276,10 @@ class Engine:
             for job in stage:
                 transfer, dt, attempts = self._execute(job, results, rep, done)
                 rep.retries += attempts - 1
-                splits.append((transfer, dt))
+                sim_dt = model.site_compute_s(job.site, dt)
+                samples.append(sim_dt)
+                splits.append((transfer, sim_dt))
+                self._trace(clock, "start", job.name, job.site, stage_load[job.site])
 
             # straggler speculation: duplicate the slowest job(s) if they
             # exceed factor x median — the duplicate "runs elsewhere" and
@@ -209,6 +300,8 @@ class Engine:
                 rep.critical_compute_s += dt_c
                 clock += tr_c + dt_c
 
+            for job in stage:
+                self._trace(clock, "finish", job.name, job.site, 0)
             done.update(j.name for j in stage if j.status == "done")
             self._save_rescue(done)
 
@@ -216,17 +309,23 @@ class Engine:
 
     # -- async (event-driven) scheduler ---------------------------------------
 
-    def _run_async(self, dag: DAG, results: dict, rep: RunReport, done: set[str]) -> None:
+    def _run_async(
+        self, dag: DAG, results: dict, rep: RunReport, done: set[str], policy: PlacementPolicy
+    ) -> None:
         """Simulated-clock event queue: every job independently walks
         submit -> stage-in -> compute -> stage-out; per-site worker slots
         (``GridModel.workers_per_site``) model contention via FIFO queues;
-        a job is submitted the instant its last dependency completes.
+        a job is submitted the instant its last dependency completes, and
+        the placement policy matches it to a site when that matchmaking
+        round completes (the "arrive" event) — fixed placement echoes the
+        pre-assigned ``job.site``, adaptive policies decide from the
+        queue-state snapshot at that instant.
 
         fn() executes at slot-acquisition order on the simulated clock, so
         jobs sharing mutable state (the CommLog builders) still observe
         dependency order.  Determinism: events tie-break on insertion
-        sequence, so identical (dag, model, measured times, seed) replay
-        identically.
+        sequence and every policy is seeded/reset per run, so identical
+        (dag, model, measured times, seed) replay identically.
         """
         model = self.model
         workers = max(1, model.workers_per_site)
@@ -249,9 +348,15 @@ class Engine:
         pred: dict[str, str | None] = dict.fromkeys(finish_t)
         # (transfer, compute) on the schedule for finished jobs
         split: dict[str, tuple[float, float]] = dict.fromkeys(finish_t, (0.0, 0.0))
-        site_busy: dict[int, int] = {j.site: 0 for j in dag.jobs.values()}
+        # the slot universe: fixed placement keeps exactly the DAG's
+        # pre-assigned sites (bit-for-bit the pre-placement engine, slot
+        # choices of speculation included); adaptive policies match over
+        # every site the grid model knows
+        sites = policy.candidate_sites([j.site for j in dag.jobs.values()], model)
+        site_busy: dict[int, int] = {s: 0 for s in sites}
         site_queue: dict[int, deque[str]] = {}  # FIFO of jobs waiting for a slot
-        samples: list[float] = []  # measured compute of started jobs
+        samples: list[float] = []  # scheduled compute of started jobs
+        samples_base: list[float] = []  # the same, in baseline (speed-1) units
         clock = t0
 
         def submit(name: str, t_elig: float) -> None:
@@ -300,7 +405,11 @@ class Engine:
                 tr_dup = model.transfer_s(0, spec_site, job.input_bytes) + model.transfer_s(
                     spec_site, 0, job.output_bytes
                 )
-                new_done = detect + tr_dup + med
+                # the duplicate's run is estimated at the baseline-units
+                # median scaled by ITS site's speed — a copy landing on a
+                # slow site must not "win" in fast-site time
+                med_base = sorted(samples_base)[len(samples_base) // 2]
+                new_done = detect + tr_dup + model.site_compute_s(spec_site, med_base)
                 if new_done >= r["t_done"]:
                     continue  # duplicate would not beat the original
                 site_busy[spec_site] += 1  # the duplicate's slot
@@ -308,6 +417,7 @@ class Engine:
                 r["t_done"] = new_done
                 rep.speculative += 1
                 rep.transfer_s += tr_dup
+                self._trace(detect, "speculate", name, spec_site, site_busy[spec_site])
                 # the winning chain: original stage-in (transfer) + original
                 # compute until detection + duplicate staging (transfer) +
                 # the duplicate's median run — the compute part is always
@@ -326,25 +436,39 @@ class Engine:
             rep.transfer_s += transfer_in + transfer_out
             dt, attempts = self._attempt(job, results, rep, done)
             rep.retries += attempts - 1
-            samples.append(dt)
-            t_done = t + transfer_in + dt + transfer_out
+            # the schedule sees the site-speed-scaled duration; job_times
+            # and compute_s keep the measured baseline
+            sim_dt = model.site_compute_s(job.site, dt)
+            samples.append(sim_dt)
+            samples_base.append(dt)
+            t_done = t + transfer_in + sim_dt + transfer_out
             pred[job.name] = gate
-            split[job.name] = (transfer_in + transfer_out, dt)
+            split[job.name] = (transfer_in + transfer_out, sim_dt)
             running[job.name] = {
                 "t_start": t,
                 "transfer_in": transfer_in,
                 "transfer_out": transfer_out,
-                "dt": dt,
+                "dt": sim_dt,
                 "t_done": t_done,
                 "spec": False,
             }
             version[job.name] = 0
             push(t_done, "finish", f"{job.name}@0")
+            self._trace(t, "start", job.name, job.site, site_busy[job.site])
             maybe_speculate(t)
 
         for job in dag.jobs.values():  # insertion order = deterministic
             if job.status != "done" and pending[job.name] == 0:
                 submit(job.name, t0)
+
+        def busy_until() -> dict[int, list[float]]:
+            """Known slot-release times per site — what the matchmaker
+            may legitimately see (finish times of jobs whose compute is
+            already in flight on the simulated clock)."""
+            out: dict[int, list[float]] = {}
+            for rname, r in running.items():
+                out.setdefault(dag.jobs[rname].site, []).append(r["t_done"])
+            return out
 
         def pop_queue(site: int, t: float, releaser: str | None) -> None:
             q = site_queue.get(site)
@@ -366,20 +490,39 @@ class Engine:
             if kind == "spec_release":
                 site = int(name)
                 site_busy[site] -= 1
+                self._trace(t, "spec_release", "", site, site_busy[site])
                 pop_queue(site, t, None)
                 maybe_speculate(t)  # the freed slot may admit a duplicate
                 continue
             if kind == "arrive":
+                # matchmaking completes: the policy assigns the site from
+                # the queue-state snapshot at this instant (fixed echoes
+                # the pre-assigned job.site)
                 job = dag.jobs[name]
+                job.site = policy.place(
+                    self._request(
+                        job,
+                        t,
+                        sites,
+                        workers,
+                        site_busy,
+                        {s: len(q) for s, q in site_queue.items()},
+                        busy_until(),
+                        samples,
+                    )
+                )
+                rep.placements[name] = job.site
                 if site_busy[job.site] < workers:
                     start(job, t, pred.get(name))  # gated by latest dep
                 else:
                     site_queue.setdefault(job.site, deque()).append(name)
+                    self._trace(t, "queue", name, job.site, site_busy[job.site])
                 continue
             # kind == "finish"
             job = dag.jobs[name]
             del running[name]
             site_busy[job.site] -= 1
+            self._trace(t, "finish", name, job.site, site_busy[job.site])
             finish_t[name] = t
             done.add(name)
             self._save_rescue(done)

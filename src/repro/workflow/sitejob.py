@@ -78,7 +78,11 @@ def timed(fn: Callable[..., Any], record: dict[str, float] | None = None, name: 
 
 def build_dag(site_jobs: list[SiteJob], name: str = "site-jobs") -> DAG:
     """Assemble SiteJobs into an executable DAG (insertion order must be
-    topological, as with ``DAG.add``)."""
+    topological, as with ``DAG.add``).  Duplicate job names and unknown
+    or self dependencies are rejected by ``DAG.add`` with the offending
+    job named — which also makes a cycle unconstructible here; cycles
+    introduced by later mutation are caught by ``DAG.validate_acyclic``
+    at run time."""
     dag = DAG(name)
     for sj in site_jobs:
         dag.add(sj.to_job())

@@ -16,6 +16,7 @@ def payload():
         "links": "grid5000",
         "compute_scale": 1,
         "schedule": "staged",
+        "placement": "fixed",
         "wall_s": 325.0,
         "overhead_pct": 99.9,
         "prep_s": 295.0,
@@ -23,8 +24,10 @@ def payload():
         "transfer_s": 1.5,
     }
     acell = dict(cell, schedule="async", wall_s=307.0, submit_s=30.0)
+    gcell = dict(acell, placement="greedy_eta", links="skewed", wall_s=306.0)
+    fcell = dict(acell, links="skewed", wall_s=309.0)
     return {
-        "cells": [cell, acell],
+        "cells": [cell, acell, gcell, fcell],
         "comparisons": [
             {
                 "app": "gfm",
@@ -34,6 +37,26 @@ def payload():
                 "wall_staged_s": 325.0,
                 "wall_async_s": 307.0,
             }
+        ],
+        "placement_comparisons": [
+            {
+                "app": "gfm",
+                "n_sites": 4,
+                "links": "skewed",
+                "compute_scale": 1,
+                "wall_fixed_s": 309.0,
+                "wall_greedy_eta_s": 306.0,
+            },
+            {
+                # far beyond the gate band — meaningful only because
+                # non-skewed rows are not gated at all
+                "app": "gfm",
+                "n_sites": 4,
+                "links": "grid5000",
+                "compute_scale": 1,
+                "wall_fixed_s": 307.0,
+                "wall_greedy_eta_s": 350.0,
+            },
         ],
     }
 
@@ -94,6 +117,50 @@ class TestCompare:
         cand["cells"][0]["overhead_pct"] = 99.9 + 6.0  # beyond 5-point band
         failures, _ = compare(payload(), cand)
         assert any("overhead_pct" in f for f in failures)
+
+    def test_legacy_baseline_cells_match_fixed_placement(self):
+        """Pre-placement baselines carry no placement field; their cells
+        must keep gating the candidate's fixed-placement cells."""
+        base = payload()
+        for cell in base["cells"]:
+            cell.pop("placement", None)
+        failures, notes = compare(base, payload())
+        assert failures == [] and notes == []
+
+    def test_placement_invariant_violation_fails(self):
+        cand = payload()
+        cand["placement_comparisons"][0]["wall_greedy_eta_s"] = 330.0  # skewed row, >5% band
+        failures, _ = compare(payload(), cand)
+        assert any("placement invariant" in f for f in failures)
+
+    def test_placement_invariant_not_gated_off_skewed(self):
+        """Only skewed rows gate: the payload's grid5000 row has greedy
+        losing to fixed by far more than the band and must not fail."""
+        failures, notes = compare(payload(), payload())
+        assert failures == [] and notes == []
+
+    def test_adaptive_cells_not_strictly_banded(self):
+        """Adaptive placement chooses sites from host-calibrated times,
+        so its transfer ledger may legitimately drift across hosts —
+        only fixed-placement cells carry the 1% simulated-component
+        band; adaptive cells stay under the loose wall band."""
+        cand = payload()
+        greedy_cell = next(c for c in cand["cells"] if c["placement"] == "greedy_eta")
+        greedy_cell["transfer_s"] *= 2.0
+        failures, _ = compare(payload(), cand)
+        assert failures == []
+        fixed_cell = next(
+            c for c in cand["cells"] if c["placement"] == "fixed" and c["schedule"] == "staged"
+        )
+        fixed_cell["transfer_s"] *= 2.0
+        failures, _ = compare(payload(), cand)
+        assert any("transfer_s" in f for f in failures)
+
+    def test_missing_placement_comparisons_fail(self):
+        cand = payload()
+        cand["placement_comparisons"] = []
+        failures, _ = compare(payload(), cand)
+        assert any("placement comparison row missing" in f for f in failures)
 
     def test_overhead_pct_not_gated_at_scaled_cells(self):
         """Compute-scale multipliers amplify calibration noise in

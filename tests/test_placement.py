@@ -1,0 +1,321 @@
+"""Placement policies (the Condor matchmaking analogue): unit behavior of
+each policy, threading through Engine/GridRuntime, the placement-aware
+analytical bounds, and the GridModel heterogeneity knobs they rely on
+(per-site speed factors, skewed links, transfer edge cases)."""
+
+import pytest
+
+from repro.workflow.dag import DAG, TimedResult
+from repro.workflow.engine import Engine
+from repro.workflow.overhead import (
+    SKEW_SITE_SPEED,
+    GridModel,
+    JobSpec,
+    estimate_dag,
+    estimate_stages_from_specs,
+)
+from repro.workflow.placement import (
+    POLICIES,
+    FixedPlacement,
+    GreedyEtaPlacement,
+    PlacementRequest,
+    RandomPlacement,
+    RoundRobinPlacement,
+    plan_specs,
+    resolve_placement,
+)
+
+ZERO = dict(prep_latency_s=0, submit_latency_s=0)
+
+
+def sim(value=None):
+    return lambda *a: TimedResult(value, 0.0)
+
+
+def request(model=None, site=3, **kw):
+    kw.setdefault("name", "j")
+    kw.setdefault("fixed_site", site)
+    kw.setdefault("input_bytes", 0)
+    kw.setdefault("output_bytes", 0)
+    kw.setdefault("expected_compute_s", 1.0)
+    kw.setdefault("now", 0.0)
+    kw.setdefault("model", model or GridModel(**ZERO))
+    kw.setdefault("sites", list(range(5)))
+    kw.setdefault("workers", 2)
+    return PlacementRequest(**kw)
+
+
+class TestPolicies:
+    def test_resolve_by_name_and_instance(self):
+        for name in POLICIES:
+            assert resolve_placement(name).name == name
+        pol = RandomPlacement(seed=7)
+        assert resolve_placement(pol) is pol
+        assert resolve_placement(None).name == "fixed"
+
+    def test_unknown_policy_rejected(self):
+        with pytest.raises(ValueError, match="unknown placement"):
+            resolve_placement("best_effort")
+        with pytest.raises(ValueError, match="unknown placement"):
+            Engine(placement="best_effort")
+
+    def test_fixed_echoes_preassigned_site(self):
+        assert FixedPlacement().place(request(site=4)) == 4
+        # fixed keeps exactly the pre-assigned site universe
+        assert FixedPlacement().candidate_sites([2, 2, 0, 2], GridModel(**ZERO)) == [2, 0]
+
+    def test_round_robin_cycles_and_resets(self):
+        pol = RoundRobinPlacement()
+        got = [pol.place(request(sites=[0, 1, 2])) for _ in range(5)]
+        assert got == [0, 1, 2, 0, 1]
+        pol.reset()
+        assert pol.place(request(sites=[0, 1, 2])) == 0
+
+    def test_random_is_seeded_and_in_range(self):
+        a = RandomPlacement(seed=3)
+        b = RandomPlacement(seed=3)
+        sites = list(range(5))
+        got_a = [a.place(request(sites=sites)) for _ in range(20)]
+        got_b = [b.place(request(sites=sites)) for _ in range(20)]
+        assert got_a == got_b
+        assert all(s in sites for s in got_a)
+        a.reset()
+        assert [a.place(request(sites=sites)) for _ in range(20)] == got_a
+
+    def test_greedy_prefers_fast_site(self):
+        # site 3 computes 1.5x faster on the skewed grid; with no load or
+        # staging the ETA is pure compute
+        model = GridModel(**ZERO, links="lan", site_speed=SKEW_SITE_SPEED)
+        assert GreedyEtaPlacement().place(request(model=model)) == 3
+
+    def test_greedy_avoids_busy_site(self):
+        # all slots at the otherwise-best site are busy far into the
+        # future -> the matchmaker goes elsewhere
+        model = GridModel(**ZERO, links="lan", site_speed=SKEW_SITE_SPEED)
+        req = request(
+            model=model,
+            site_busy={3: 2},
+            busy_until={3: [100.0, 200.0]},
+            service_est_s=1.0,
+        )
+        assert GreedyEtaPlacement().place(req) != 3
+
+    def test_greedy_queue_wait_prices_fifo_depth(self):
+        req = request(site_busy={0: 2}, queue_depth={0: 3}, busy_until={0: [4.0, 9.0]},
+                      service_est_s=2.0)
+        # first release at t=4, three queued ahead beyond it (2+3-2=3)
+        assert req.queue_wait_s(0) == pytest.approx(4.0 + 3 * 2.0)
+        assert req.queue_wait_s(1) == 0.0
+
+
+class TestEnginePlacement:
+    def mk(self, n=4):
+        dag = DAG()
+        for i in range(n):
+            dag.job(f"j{i}", sim(), site=0, sim_compute_s=1.0)
+        return dag
+
+    def test_round_robin_spreads_jobs(self):
+        rep = Engine(model=GridModel(**ZERO), schedule="async", placement="round_robin").run(
+            self.mk(5)
+        )
+        assert sorted(rep.placements.values()) == [0, 1, 2, 3, 4]
+
+    def test_run_placement_override(self):
+        eng = Engine(model=GridModel(**ZERO), schedule="async")
+        rep = eng.run(self.mk(), placement="round_robin")
+        assert rep.placement == "round_robin"
+        assert eng.run(self.mk()).placement == "fixed"  # engine default intact
+
+    def test_adaptive_relieves_contention(self):
+        """4 one-second jobs pinned to one 1-slot site serialize under
+        fixed placement; any adaptive policy spreads them out."""
+        model = GridModel(**ZERO, workers_per_site=1)
+        fixed = Engine(model=model, schedule="async", placement="fixed").run(self.mk())
+        spread = Engine(model=model, schedule="async", placement="round_robin").run(self.mk())
+        greedy = Engine(model=model, schedule="async", placement="greedy_eta").run(self.mk())
+        assert fixed.wall_s == pytest.approx(4.0)
+        assert spread.wall_s == pytest.approx(1.0)
+        assert greedy.wall_s <= fixed.wall_s + 1e-9
+
+    def test_staged_placement_places_per_stage(self):
+        rep = Engine(model=GridModel(**ZERO), schedule="staged", placement="round_robin").run(
+            self.mk(5)
+        )
+        assert rep.placement == "round_robin"
+        assert sorted(rep.placements.values()) == [0, 1, 2, 3, 4]
+
+    def test_speculation_survives_adaptive_placement(self):
+        """Rescue/retry/speculation semantics hold in every policy: the
+        straggler still gets a winning duplicate under greedy placement."""
+        dag = DAG()
+        dag.job("straggler", sim(), site=3, sim_compute_s=10.0)
+        for i in range(3):
+            dag.job(f"fast{i}", sim(), site=i, sim_compute_s=1.0)
+        for policy in POLICIES:
+            rep = Engine(
+                model=GridModel(**ZERO), schedule="async",
+                placement=policy, straggler_factor=3.0,
+            ).run(dag_copy(dag))
+            assert rep.speculative >= 1, policy
+            assert rep.wall_s < 10.0, policy
+
+    def test_retries_and_rescue_with_placement(self, tmp_path):
+        from repro.workflow.faults import FaultInjector
+
+        rescue = tmp_path / "rescue.json"
+        calls = []
+
+        def mk():
+            dag = DAG()
+            dag.job("a", lambda: calls.append("a") or 1)
+            dag.job("flaky", lambda a: calls.append("flaky") or a + 1, deps=["a"], retries=3)
+            return dag
+
+        eng = Engine(
+            model=GridModel(**ZERO),
+            schedule="async",
+            placement="greedy_eta",
+            faults=FaultInjector(fail={"flaky": 2}),
+            rescue_path=rescue,
+        )
+        results = {}
+        rep = eng.run(mk(), results=results)
+        assert results["flaky"] == 2
+        assert rep.retries == 2
+        assert rescue.exists()
+
+
+def dag_copy(dag: DAG) -> DAG:
+    out = DAG(dag.name)
+    for j in dag.jobs.values():
+        out.job(
+            j.name, j.fn, deps=list(j.deps), site=j.site,
+            input_bytes=j.input_bytes, output_bytes=j.output_bytes,
+            sim_compute_s=j.sim_compute_s,
+        )
+    return out
+
+
+class TestPlacementAwareBounds:
+    SPECS = [
+        JobSpec("a", (), 2.0, 10**6, 0, 1),
+        JobSpec("b", ("a",), 2.0, 0, 10**5, 4),
+    ]
+
+    def test_plan_specs_fixed_is_identity(self):
+        model = GridModel(**ZERO)
+        assert [sp.site for sp in plan_specs(self.SPECS, model, "fixed")] == [1, 4]
+
+    def test_plan_specs_greedy_rewrites_sites(self):
+        model = GridModel.skewed(**ZERO)
+        planned = plan_specs(self.SPECS, model, "greedy_eta")
+        # sites 1 and 4 are the penalized ones; greedy must leave them
+        assert all(sp.site not in (1, 4) for sp in planned)
+
+    def test_estimate_dag_placement_aware(self):
+        model = GridModel.skewed(**ZERO)
+        fixed = estimate_dag(self.SPECS, model)
+        greedy = estimate_dag(self.SPECS, model, placement="greedy_eta")
+        assert greedy < fixed
+        assert estimate_dag(self.SPECS, model, placement="fixed") == pytest.approx(fixed)
+
+    def test_estimate_stages_placement_aware(self):
+        model = GridModel.skewed(**ZERO)
+        fixed = estimate_stages_from_specs(self.SPECS, model)
+        greedy = estimate_stages_from_specs(self.SPECS, model, placement="greedy_eta")
+        assert greedy < fixed
+
+    def test_engine_wall_lower_bounded_by_placed_estimate(self):
+        """The bound priced at the actually-chosen sites stays a true
+        lower bound on the async engine's wall."""
+        from repro.workflow.sitejob import replay_dag
+
+        model = GridModel.skewed()
+        rep = Engine(model=model, schedule="async", placement="greedy_eta").run(
+            replay_dag(self.SPECS)
+        )
+        placed = [sp._replace(site=rep.placements[sp.name]) for sp in self.SPECS]
+        assert rep.wall_s >= estimate_dag(placed, model) - 1e-9
+
+
+class TestGridModelHeterogeneity:
+    def test_zero_and_negative_bytes_cost_nothing(self):
+        m = GridModel()
+        assert m.transfer_s(0, 3, 0) == 0.0
+        assert m.transfer_s(0, 3, -10) == 0.0
+        assert m.transfer_s(2, 2, 0) == 0.0
+
+    def test_link_matrix_is_asymmetric(self):
+        m = GridModel()
+        # Table 2: Nancy->Orsay 106.63 Mb/s vs Orsay->Nancy 90.77 Mb/s
+        assert m.transfer_s(3, 0, 10**7) != m.transfer_s(0, 3, 10**7)
+
+    def test_unknown_site_index_wraps_like_link_matrix(self):
+        m = GridModel()
+        assert m.transfer_s(7, 0, 10**6) == pytest.approx(m.transfer_s(2, 0, 10**6))
+        assert m.transfer_s(0, 9, 10**6) == pytest.approx(m.transfer_s(0, 4, 10**6))
+        sped = GridModel(site_speed=(1.0, 2.0))
+        assert sped.speed(5) == sped.speed(1) == 2.0
+
+    def test_default_speeds_are_homogeneous_identity(self):
+        """site_speed=None is the pre-placement engine: site_compute_s is
+        the identity (bit-for-bit, not merely 'divide by 1.0')."""
+        m = GridModel()
+        assert m.site_speed is None
+        val = 0.123456789
+        assert m.site_compute_s(3, val) is val
+        assert m.speed(2) == 1.0
+
+    def test_speed_factors_scale_compute(self):
+        m = GridModel(site_speed=(1.0, 2.0, 0.5))
+        assert m.site_compute_s(1, 3.0) == pytest.approx(1.5)
+        assert m.site_compute_s(2, 3.0) == pytest.approx(6.0)
+        assert m.site_compute_s(0, 3.0) == pytest.approx(3.0)
+
+    def test_invalid_speed_and_links_rejected(self):
+        with pytest.raises(ValueError, match="site_speed"):
+            GridModel(site_speed=(1.0, 0.0))
+        with pytest.raises(ValueError, match="site_speed"):
+            GridModel(site_speed=())
+        with pytest.raises(ValueError, match="unknown links"):
+            GridModel(links="wan")
+
+    def test_skewed_links_penalize_per_site(self):
+        base, skew = GridModel(), GridModel(links="skewed")
+        # links touching penalized sites (1, 4) degrade...
+        assert skew.transfer_s(0, 1, 10**7) > base.transfer_s(0, 1, 10**7)
+        assert skew.transfer_s(4, 0, 10**7) > base.transfer_s(4, 0, 10**7)
+        # ...the upgraded backbone (site 3) improves
+        assert skew.transfer_s(0, 3, 10**7) < base.transfer_s(0, 3, 10**7)
+
+    def test_skewed_classmethod_bundles_speeds(self):
+        m = GridModel.skewed()
+        assert m.links == "skewed"
+        assert m.site_speed == SKEW_SITE_SPEED
+        assert GridModel.skewed(links="lan").links == "lan"
+
+
+class TestRuntimePlacementThreading:
+    def test_runtime_threads_placement_into_engine(self):
+        from repro.runtime import GridRuntime
+
+        rt = GridRuntime(sync="pooled", schedule="async", placement="greedy_eta")
+        assert resolve_placement(rt.engine.placement).name == "greedy_eta"
+        assert rt.engine.schedule == "async"
+
+    def test_runtime_rebuilds_supplied_engine_on_mismatch(self):
+        from repro.runtime import GridRuntime
+
+        eng = Engine(model=GridModel(**ZERO), schedule="async")
+        rt = GridRuntime(engine=eng, sync="pooled", placement="round_robin")
+        assert eng.placement == "fixed"  # caller's engine never mutated
+        assert resolve_placement(rt.engine.placement).name == "round_robin"
+        assert rt.engine.model is eng.model
+
+    def test_runtime_keeps_matching_engine(self):
+        from repro.runtime import GridRuntime
+
+        eng = Engine(model=GridModel(**ZERO), schedule="async", placement="random")
+        rt = GridRuntime(engine=eng, sync="pooled", schedule="async", placement="random")
+        assert rt.engine is eng

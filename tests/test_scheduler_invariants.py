@@ -1,0 +1,235 @@
+"""Scheduler invariants across all placement policies, property-tested
+over random DAGs (hypothesis, with the deterministic repro.testing
+fallback for hermetic environments):
+
+  * per-site worker slots are never oversubscribed
+    (``site_busy <= workers_per_site`` at every trace record);
+  * the event clock is monotone non-decreasing;
+  * every job reaches a terminal state (and is placed exactly once);
+  * dependency order is never violated (a job starts only after every
+    dependency finished);
+plus the determinism regression: identical ``RunReport`` — placement
+decisions and speculation outcomes included — across repeated runs with
+the same seed, for both schedule modes x both mining apps x each policy,
+and the fixed policy reproducing the pre-placement engine bit-for-bit.
+"""
+
+import random
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # hermetic container: deterministic fallback
+    from repro.testing import given, settings, strategies as st
+
+from repro.workflow.dag import DAG, TimedResult
+from repro.workflow.engine import SCHEDULES, Engine
+from repro.workflow.overhead import GridModel
+from repro.workflow.placement import POLICIES
+
+N_SITES = 5
+
+
+def sim(value=None):
+    """A job fn whose measured compute is exactly 0 (TimedResult), so the
+    simulated clock advances by sim_compute_s alone — deterministic."""
+    return lambda *a: TimedResult(value, 0.0)
+
+
+def random_dag(seed: int, n_jobs: int) -> DAG:
+    """A random topology: each job depends on a subset of earlier jobs,
+    with random sites, staging sizes and simulated compute."""
+    rng = random.Random(seed)
+    dag = DAG(f"rand-{seed}")
+    names = [f"j{i}" for i in range(n_jobs)]
+    for i, name in enumerate(names):
+        deps = [d for d in names[:i] if rng.random() < 0.3][:3]
+        dag.job(
+            name,
+            sim(),
+            deps=deps,
+            site=rng.randrange(N_SITES),
+            input_bytes=rng.randrange(0, 10**6),
+            output_bytes=rng.randrange(0, 10**5),
+            sim_compute_s=round(rng.uniform(0.0, 3.0), 3),
+        )
+    return dag
+
+
+def run_traced(dag: DAG, policy: str, schedule: str, workers: int, straggler: float):
+    trace: list = []
+    eng = Engine(
+        model=GridModel(
+            prep_latency_s=0.0, submit_latency_s=0.5, workers_per_site=workers
+        ),
+        schedule=schedule,
+        placement=policy,
+        straggler_factor=straggler,
+        trace=trace,
+    )
+    rep = eng.run(dag)
+    return rep, trace
+
+
+class TestSchedulerInvariants:
+    """Trace records are (t, kind, job, site, site_busy_after).  The
+    "speculate" record is future-dated to the detection instant (it is
+    pushed while processing an earlier event), so clock monotonicity is
+    asserted over the event records only."""
+
+    @settings(max_examples=40, deadline=None)
+    @given(
+        st.integers(min_value=0, max_value=10**9),
+        st.integers(min_value=1, max_value=14),
+        st.sampled_from(POLICIES),
+        st.sampled_from(SCHEDULES),
+        st.integers(min_value=1, max_value=3),
+        st.sampled_from([0.0, 2.5]),
+    )
+    def test_invariants(self, seed, n_jobs, policy, schedule, workers, straggler):
+        dag = random_dag(seed, n_jobs)
+        fixed_sites = {name: job.site for name, job in dag.jobs.items()}
+        rep, trace = run_traced(dag, policy, schedule, workers, straggler)
+
+        # every job reaches a terminal state and was placed exactly once
+        assert all(j.status == "done" for j in dag.jobs.values())
+        assert set(rep.placements) == set(dag.jobs)
+        assert rep.placement == policy
+
+        # placements land on real sites; fixed echoes the a-priori ones
+        if policy == "fixed":
+            assert rep.placements == fixed_sites
+        else:
+            assert all(0 <= s < N_SITES for s in rep.placements.values())
+
+        # worker slots are never oversubscribed, and releases never go
+        # negative (async traces busy after start/finish/speculate)
+        for t, kind, job, site, busy in trace:
+            if schedule == "async":
+                assert 0 <= busy <= workers, (kind, job, site, busy)
+            assert rep.wall_s >= t - 1e-9
+
+        # the event clock is monotone non-decreasing
+        times = [t for t, kind, *_ in trace if kind != "speculate"]
+        assert all(t1 >= t0 - 1e-9 for t0, t1 in zip(times, times[1:]))
+
+        # dependency order is never violated: a job starts only after
+        # every one of its dependencies finished
+        starts = {job: t for t, kind, job, *_ in trace if kind == "start"}
+        finishes = {job: t for t, kind, job, *_ in trace if kind == "finish"}
+        assert set(starts) == set(dag.jobs) and set(finishes) == set(dag.jobs)
+        for name, job in dag.jobs.items():
+            for dep in job.deps:
+                assert starts[name] >= finishes[dep] - 1e-9, (name, dep, policy, schedule)
+
+        # the schedule's wall covers the whole trace and the accounting
+        # identity holds
+        assert rep.wall_s >= rep.critical_path_s - 1e-9
+        assert 0.0 <= rep.overhead_pct() <= 100.0
+
+
+def app_specs():
+    """Both mining applications' real DAG topologies (builders only — no
+    kernel execution), stripped to analytical specs."""
+    import jax
+
+    from repro.core.apriori import TransactionDB
+    from repro.core.gfm import gfm_site_jobs
+    from repro.core.vclustering import VClusterConfig, vcluster_site_jobs
+    from repro.data.synthetic import (
+        gaussian_mixture,
+        ibm_transactions,
+        split_sites,
+        split_transactions,
+    )
+    from repro.workflow.sitejob import job_specs
+
+    pts, _ = gaussian_mixture(0, 400, 2, 4, spread=12.0, sigma=0.5)
+    xs = split_sites(pts, 4, seed=1)
+    vjobs = vcluster_site_jobs(
+        jax.random.PRNGKey(0), xs, VClusterConfig(k_local=4, kmeans_iters=5)
+    )
+
+    dense = ibm_transactions(seed=2, n_tx=200, n_items=16, avg_tx_len=5, n_patterns=4)
+    sites = [TransactionDB.from_dense(s) for s in split_transactions(dense, 4, seed=0)]
+    gjobs = gfm_site_jobs(sites, 2, 0.1)
+    return {"vclustering": job_specs(vjobs), "gfm": job_specs(gjobs)}
+
+
+def report_fingerprint(rep):
+    """Everything observable about a simulated run, placement decisions
+    and speculation outcomes included."""
+    return (
+        rep.wall_s,
+        rep.compute_s,
+        rep.critical_compute_s,
+        rep.critical_transfer_s,
+        rep.prep_s,
+        rep.submit_s,
+        rep.transfer_s,
+        rep.retries,
+        rep.speculative,
+        rep.schedule,
+        rep.placement,
+        tuple(sorted(rep.placements.items())),
+        tuple(sorted(rep.job_times.items())),
+    )
+
+
+class TestDeterminism:
+    """Identical (DAG, model, times, seed) must replay identically under
+    every schedule mode x mining app x placement policy."""
+
+    @pytest.fixture(scope="class")
+    def specs_by_app(self):
+        return app_specs()
+
+    @pytest.mark.parametrize("schedule", SCHEDULES)
+    @pytest.mark.parametrize("policy", POLICIES)
+    def test_repeated_runs_identical(self, specs_by_app, schedule, policy):
+        from repro.workflow.sitejob import replay_dag
+
+        model = GridModel.skewed(workers_per_site=2)
+        for app, specs in specs_by_app.items():
+            times = {sp.name: 0.05 * (i % 3 + 1) for i, sp in enumerate(specs)}
+            prints = []
+            for _ in range(2):
+                eng = Engine(
+                    model=model, schedule=schedule, placement=policy, straggler_factor=2.5
+                )
+                prints.append(report_fingerprint(eng.run(replay_dag(specs, times))))
+            assert prints[0] == prints[1], (app, schedule, policy)
+
+    @pytest.mark.parametrize("schedule", SCHEDULES)
+    def test_fixed_policy_reproduces_pre_placement_engine(self, specs_by_app, schedule):
+        """placement="fixed" (and the default) must be bit-for-bit the
+        engine that honored job.site a priori — same wall, same critical
+        path, same submit/transfer ledger."""
+        from repro.workflow.sitejob import replay_dag
+
+        for app, specs in specs_by_app.items():
+            times = {sp.name: 0.05 * (i % 3 + 1) for i, sp in enumerate(specs)}
+            default = Engine(model=GridModel(), schedule=schedule).run(
+                replay_dag(specs, times)
+            )
+            explicit = Engine(model=GridModel(), schedule=schedule, placement="fixed").run(
+                replay_dag(specs, times)
+            )
+            assert report_fingerprint(default) == report_fingerprint(explicit), (app, schedule)
+            assert default.placements == {sp.name: sp.site for sp in specs}
+
+    def test_greedy_eta_beats_fixed_on_skewed_grid(self, specs_by_app):
+        """The acceptance invariant behind the CI sweep gate, asserted on
+        the applications' own topologies: on the heterogeneous grid,
+        adaptive matchmaking never loses to a-priori pinning."""
+        from repro.workflow.sitejob import replay_dag
+
+        model = GridModel.skewed()
+        for app, specs in specs_by_app.items():
+            times = {sp.name: 0.2 * (i % 3 + 1) for i, sp in enumerate(specs)}
+            walls = {}
+            for policy in ("fixed", "greedy_eta"):
+                eng = Engine(model=model, schedule="async", placement=policy)
+                walls[policy] = eng.run(replay_dag(specs, times)).wall_s
+            assert walls["greedy_eta"] <= walls["fixed"] + 1e-9, (app, walls)

@@ -40,10 +40,54 @@ class TestDAG:
         with pytest.raises(ValueError, match="cycle"):
             dag.validate_acyclic()
 
+    def test_cycle_error_names_the_cycle(self):
+        dag = DAG("wf")
+        dag.job("a", lambda: 1)
+        dag.job("b", lambda a: 1, deps=["a"])
+        dag.job("c", lambda b: 1, deps=["b"])
+        dag.jobs["a"].deps = ["c"]  # a -> c -> b -> a
+        with pytest.raises(ValueError, match=r"wf.*(a -> c -> b -> a|c -> b -> a -> c|b -> a -> c -> b)"):
+            dag.validate_acyclic()
+
+    def test_self_dependency_rejected(self):
+        dag = DAG()
+        with pytest.raises(ValueError, match="depends on itself"):
+            dag.job("a", lambda: 1, deps=["a"])
+
+    def test_duplicate_job_rejected(self):
+        dag = DAG("wf")
+        dag.job("a", lambda: 1)
+        with pytest.raises(ValueError, match="duplicate job 'a' in DAG 'wf'"):
+            dag.job("a", lambda: 2)
+
+    def test_build_dag_rejects_duplicates_and_cycles(self):
+        from repro.workflow.sitejob import SiteJob, build_dag
+
+        dup = [SiteJob("s", lambda: 1), SiteJob("s", lambda: 2)]
+        with pytest.raises(ValueError, match="duplicate job 's'"):
+            build_dag(dup)
+
+        jobs = [SiteJob("a", lambda: 1), SiteJob("b", lambda a: 1, deps=["a"])]
+        dag = build_dag(jobs)  # valid topology assembles fine
+        dag.jobs["a"].deps = ["b"]
+        with pytest.raises(ValueError, match="cycle"):
+            dag.validate_acyclic()
+
+    def test_deep_chain_validates_without_recursion_limit(self):
+        dag = DAG()
+        dag.job("j0", lambda: 0)
+        for i in range(1, 5000):
+            dag.job(f"j{i}", lambda x: x, deps=[f"j{i - 1}"])
+        dag.validate_acyclic()  # must not raise RecursionError
+
     def test_unknown_dep_rejected(self):
         dag = DAG()
         with pytest.raises(ValueError, match="unknown"):
             dag.job("a", lambda: 1, deps=["nope"])
+        dag.job("a", lambda: 1)
+        dag.jobs["a"].deps = ["ghost"]  # mutated after add
+        with pytest.raises(ValueError, match="depends on unknown 'ghost'"):
+            dag.validate_acyclic()
 
 
 class TestFaultTolerance:
