@@ -55,6 +55,7 @@ def run(
     out: str = "BENCH_runtime.json",
     use_kernel: bool | None = None,
     schedule: str = "staged",
+    exec_backend: str = "inline",
 ) -> dict:
     from repro.core.apriori import TransactionDB
     from repro.core.vclustering import VClusterConfig
@@ -86,7 +87,8 @@ def run(
 
     backend = "kernel" if use_kernel else "jnp"
     rt = GridRuntime.for_sites(
-        n_sites, use_kernel=use_kernel, count_backend=backend, schedule=schedule
+        n_sites, use_kernel=use_kernel, count_backend=backend, schedule=schedule,
+        backend=exec_backend,
     )
     cfg = VClusterConfig(k_local=k_local, kmeans_iters=iters, use_kernel=use_kernel)
 
@@ -126,6 +128,7 @@ def run(
             "jax": jax.__version__,
             "n_sites": n_sites,
             "schedule": schedule,
+            "exec_backend": exec_backend,
             "clustering_shape": [n_pts, dim, k_local],
             "itemsets_shape": [n_tx, n_items, k_items, minsup],
         },
@@ -173,12 +176,19 @@ def main() -> None:
         default="staged",
         help="engine scheduler: stage-barrier or event-driven",
     )
+    ap.add_argument(
+        "--backend",
+        choices=["inline", "batched"],
+        default="inline",
+        help="execution backend: per-job host loop or fused vmapped fan-outs",
+    )
     args = ap.parse_args()
     run(
         smoke=args.smoke,
         out=args.out,
         use_kernel=None if args.kernel == "auto" else args.kernel == "on",
         schedule=args.schedule,
+        exec_backend=args.backend,
     )
 
 

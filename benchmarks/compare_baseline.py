@@ -24,7 +24,12 @@ schedule x placement):
     candidate placement-comparison row — on the heterogeneous grid
     (degraded per-site links + per-site compute speeds), adaptive
     matchmaking must never lose to a-priori site pinning on identical
-    replayed times.
+    replayed times;
+  * the batched<=inline execution-backend gate on every candidate
+    backend-comparison row with >= 8 sites — on fan-out-heavy cells the
+    fused vmapped site-compute must not lose wall time to the per-job
+    host loop (5% band: the walls share identical simulated components,
+    so the delta is pure calibrated-compute difference plus host noise).
 
 Regressions are one-sided: a candidate that got FASTER passes (with a
 note suggesting a baseline refresh).  Cells present in the baseline but
@@ -44,14 +49,17 @@ import argparse
 import json
 import sys
 
-CELL_KEY = ("app", "n_sites", "links", "compute_scale", "schedule", "placement")
+CELL_KEY = ("app", "n_sites", "links", "compute_scale", "schedule", "placement", "exec_backend")
 STRICT_FIELDS = ("prep_s", "submit_s", "transfer_s")
+# axis fields added over time default to the behavior older baselines ran
+KEY_DEFAULTS = {"placement": "fixed", "exec_backend": "inline"}
 
 
 def _key(cell: dict) -> tuple:
-    # pre-placement baselines carry no "placement" field; those cells ran
-    # the fixed (a-priori sites) behavior
-    return tuple(cell.get(k, "fixed") if k == "placement" else cell[k] for k in CELL_KEY)
+    # pre-placement baselines carry no "placement" field (those cells ran
+    # the fixed a-priori sites); pre-backend baselines carry no
+    # "exec_backend" (those ran the inline host loop)
+    return tuple(cell.get(k, KEY_DEFAULTS[k]) if k in KEY_DEFAULTS else cell[k] for k in CELL_KEY)
 
 
 def compare(
@@ -144,6 +152,29 @@ def compare(
         if g > f_ * 1.05 + 1e-9:
             failures.append(
                 f"{tag}: placement invariant violated — greedy_eta wall {g:.2f}s > fixed {f_:.2f}s"
+            )
+
+    # execution-backend gate: on fan-out-heavy cells (>= 8 sites) the
+    # fused batched backend must not lose wall time to the inline host
+    # loop.  Coverage first: baseline backend-comparison rows must
+    # survive into the candidate.
+    def bcomp_key(comp: dict) -> tuple:
+        return (comp["app"], comp["n_sites"], comp["schedule"], comp["compute_scale"])
+
+    cand_bcomps = {bcomp_key(c): c for c in candidate.get("backend_comparisons", [])}
+    for comp in baseline.get("backend_comparisons", []):
+        key = bcomp_key(comp)
+        if key not in cand_bcomps:
+            tag = f"{key[0]}/s{key[1]}/{key[2]}/x{key[3]}"
+            failures.append(f"{tag}: backend comparison row missing from candidate sweep")
+    for comp in cand_bcomps.values():
+        if comp["n_sites"] < 8:
+            continue  # small fan-outs: fusion gains are within host noise
+        i, b = comp["wall_inline_s"], comp["wall_batched_s"]
+        tag = f"{comp['app']}/s{comp['n_sites']}/{comp['schedule']}/x{comp['compute_scale']}"
+        if b > i * 1.05 + 1e-9:
+            failures.append(
+                f"{tag}: backend invariant violated — batched wall {b:.2f}s > inline {i:.2f}s"
             )
 
     return failures, notes

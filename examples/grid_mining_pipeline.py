@@ -19,7 +19,7 @@ import jax.numpy as jnp
 from repro.core.apriori import TransactionDB, local_apriori
 from repro.core.gfm import gfm_mine
 from repro.core.kmeans import kmeans
-from repro.core.stats import stack_site_stats, SuffStats
+from repro.core.stats import SuffStats, stack_site_stats
 from repro.core.vclustering import merge_subclusters, paper_threshold
 from repro.data.synthetic import gaussian_mixture, ibm_transactions, split_sites, split_transactions
 from repro.workflow.dag import DAG

@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import importlib
 
-from repro.configs.shapes import SHAPES, input_specs, cell_is_supported, skip_reason  # noqa: F401
+from repro.configs.shapes import SHAPES, cell_is_supported, input_specs, skip_reason  # noqa: F401
 from repro.models.config import ModelConfig, reduced  # noqa: F401
 
 ARCHS = [

@@ -14,9 +14,9 @@ the protocol is orchestrated at the grid-job level anyway.
 from __future__ import annotations
 
 import functools
+from collections.abc import Iterable, Sequence
 from dataclasses import dataclass
 from itertools import combinations
-from typing import Iterable, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -104,6 +104,74 @@ def count_supports(
     for s in range(0, masks_np.shape[0], block_c):
         outs.append(np.asarray(_count_block(db.packed, jnp.asarray(masks_np[s : s + block_c]))))
     return np.concatenate(outs).astype(np.int64)
+
+
+def _cand_bucket(n: int, step: int = 64) -> int:
+    """Round a candidate count up to a bucket so the fused counting jit
+    compiles O(log) distinct shapes instead of one per level."""
+    return max(step, ((n + step - 1) // step) * step)
+
+
+@jax.jit
+def _count_block_sites(dbs: jax.Array, masks: jax.Array) -> jax.Array:
+    """(S, N, W) uint32, (S, C, W) uint32 -> (S, C) int32 — the fused
+    site-axis form of ``_count_block``: one device dispatch for the
+    whole fan-out."""
+    return jax.vmap(_count_block)(dbs, masks)
+
+
+def fused_count_sites(
+    dbs: Sequence[TransactionDB],
+    itemset_lists: Sequence[Sequence[Itemset]],
+    backend: str = "jnp",
+) -> list[np.ndarray]:
+    """Count each site's OWN candidate list with ONE device dispatch
+    across the site axis — the fused form of per-site ``count_supports``
+    loops that the batched execution backend uses for the ``apriori_i``
+    / ``recount_i`` / FDM count fan-outs.
+
+    Sites are padded to a common shape: transactions to the max ``n_tx``
+    (all-zero rows match no non-empty mask, so padded rows count zero
+    support) and candidates to a bucketed max count (padded all-zero
+    masks produce garbage counts that are sliced away per site before
+    returning).  Returns one (C_i,) int64 array per site, exactly equal
+    to ``count_supports(dbs[i], itemset_lists[i])``.
+
+    Falls back to the per-site loop when the sites disagree on the item
+    universe (no common mask width) — correctness first, fusion when
+    legal.
+    """
+    lists = [list(lst) for lst in itemset_lists]
+    if len(dbs) != len(lists):
+        raise ValueError(f"{len(dbs)} sites but {len(lists)} candidate lists")
+    empty = np.zeros((0,), dtype=np.int64)
+    live = [i for i, lst in enumerate(lists) if lst]
+    out: list[np.ndarray] = [empty] * len(lists)
+    if not live:
+        return out
+    widths = {n_words(dbs[i].n_items) for i in live}
+    if len(widths) != 1:
+        # heterogeneous item universes cannot share one mask layout
+        for i in live:
+            out[i] = count_supports(dbs[i], lists[i], backend=backend)
+        return out
+    w = widths.pop()
+    n_max = max(dbs[i].n_tx for i in live)
+    c_max = _cand_bucket(max(len(lists[i]) for i in live))
+    tx_s = np.zeros((len(live), n_max, w), dtype=np.uint32)
+    masks_s = np.zeros((len(live), c_max, w), dtype=np.uint32)
+    for row, i in enumerate(live):
+        tx_s[row, : dbs[i].n_tx] = np.asarray(dbs[i].packed)
+        masks_s[row, : len(lists[i])] = pack_itemsets(lists[i], dbs[i].n_items)
+    if backend == "kernel":
+        from repro.kernels import ops
+
+        counts = np.asarray(ops.support_count_sites(jnp.asarray(tx_s), jnp.asarray(masks_s)))
+    else:
+        counts = np.asarray(_count_block_sites(jnp.asarray(tx_s), jnp.asarray(masks_s)))
+    for row, i in enumerate(live):
+        out[i] = counts[row, : len(lists[i])].astype(np.int64)
+    return out
 
 
 def item_supports(db: TransactionDB) -> np.ndarray:
@@ -197,6 +265,68 @@ def local_apriori(
     for lv in range(1, k_max + 1):
         frequent.setdefault(lv, [])
     return LocalMineResult(counts=counts, frequent=frequent, count_calls=calls, candidates_counted=n_cand)
+
+
+def batched_local_apriori(
+    dbs: Sequence[TransactionDB],
+    k_max: int,
+    min_counts: Sequence[int],
+    backend: str = "jnp",
+) -> list[LocalMineResult]:
+    """Phase-1 local Apriori for ALL sites in lockstep: per level, every
+    site generates its candidates on host, then ONE fused device
+    dispatch (``fused_count_sites``) counts every site's candidates
+    across the site axis.  Result-identical to per-site
+    ``local_apriori`` calls — same candidates (generation depends only
+    on each site's own frequents), same exact integer counts, same
+    ``count_calls`` ledger (which counts the protocol's logical
+    per-site count rounds, not device dispatches) — but the fan-out
+    costs one kernel launch per level instead of one per site-level.
+    """
+    if len(dbs) != len(min_counts):
+        raise ValueError(f"{len(dbs)} sites but {len(min_counts)} thresholds")
+    res: list[LocalMineResult] = []
+    for db, min_count in zip(dbs, min_counts):
+        counts: dict[Itemset, int] = {}
+        sup1 = item_supports(db)
+        for item, c in enumerate(sup1):
+            counts[(int(item),)] = int(c)
+        res.append(
+            LocalMineResult(
+                counts=counts,
+                frequent={1: [(int(i),) for i in np.nonzero(sup1 >= min_count)[0]]},
+                count_calls=1,
+                candidates_counted=db.n_items,
+            )
+        )
+    level = 1
+    active = set(range(len(dbs)))
+    while level < k_max and active:
+        cands_by: list[list[Itemset]] = [[] for _ in dbs]
+        for i in list(active):
+            if not res[i].frequent.get(level):
+                active.discard(i)  # this site's search is exhausted
+                continue
+            cands_by[i] = apriori_join(res[i].frequent[level])
+        level += 1
+        sups = fused_count_sites(dbs, cands_by, backend=backend)
+        for i in list(active):
+            cands = cands_by[i]
+            if not cands:
+                res[i].frequent[level] = []
+                active.discard(i)
+                continue
+            res[i].count_calls += 1
+            res[i].candidates_counted += len(cands)
+            for its, c in zip(cands, sups[i]):
+                res[i].counts[its] = int(c)
+            res[i].frequent[level] = [
+                its for its, c in zip(cands, sups[i]) if c >= min_counts[i]
+            ]
+    for lm in res:
+        for lv in range(1, k_max + 1):
+            lm.frequent.setdefault(lv, [])
+    return res
 
 
 # ---------------------------------------------------------------------------

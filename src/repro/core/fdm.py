@@ -27,6 +27,7 @@ from repro.core.apriori import (
     TransactionDB,
     apriori_join,
     count_supports,
+    fused_count_sites,
     item_supports,
 )
 from repro.core.gfm import CommLog, _itemset_bytes
@@ -169,8 +170,14 @@ def fdm_site_jobs(
     Safe under both engine schedulers: each level's ledger mutations are
     ordered by the dependency chain (count -> announce -> remote ->
     decide), which ``schedule="async"`` preserves.
+
+    The per-level fan-outs (``count_l_i``, ``remote_l_i``) carry
+    ``batch_key``/``batched_fn`` hooks: under the ``batched`` execution
+    backend each level's counting runs as ONE fused site-axis dispatch
+    (``fused_count_sites``) — result- and ledger-identical to the
+    per-site loop.
     """
-    from repro.workflow.sitejob import SiteJob, timed
+    from repro.workflow.sitejob import SiteJob, timed, timed_batch
 
     s = len(sites)
     n_total = sum(db.n_tx for db in sites)
@@ -200,6 +207,39 @@ def fdm_site_jobs(
             return {"cnt": cnt, "ann": ann}
 
         return fn
+
+    def count_batched(level):
+        def fused(bargs, argss):
+            prevs = [args[0] if args else None for args in argss]
+            if level > 1 and any(p is None or not p["global"] for p in prevs):
+                # all members share the same decide dep, so exhaustion is
+                # all-or-nothing — mirror the per-site early-out exactly
+                return [None] * len(bargs)
+            cands_by = [
+                site_candidates(
+                    level,
+                    sites[i],
+                    prevs[j]["global"] if prevs[j] else [],
+                    prevs[j]["local"][i] if prevs[j] else set(),
+                )
+                for j, i in enumerate(bargs)
+            ]
+            t0 = time.perf_counter()
+            if level == 1:
+                sups = [item_supports(sites[i]) for i in bargs]
+            else:
+                sups = fused_count_sites([sites[i] for i in bargs], cands_by, backend=backend)
+            acc["total"] += time.perf_counter() - t0
+            outs = []
+            for j, i in enumerate(bargs):
+                cands = cands_by[j]
+                if level == 1 or cands:
+                    comm.count_calls += 1  # the protocol's logical per-site count
+                cnt = {its: int(c) for its, c in zip(cands, np.asarray(sups[j]))}
+                outs.append({"cnt": cnt, "ann": {its for its in cands if cnt[its] >= l_min[i]}})
+            return outs
+
+        return fused
 
     def announce_fn(level):
         def fn(*outs):
@@ -242,6 +282,32 @@ def fdm_site_jobs(
 
         return fn
 
+    def remote_batched(level):
+        def fused(bargs, argss):
+            # members share the announce dep; each brings its own count
+            if any(cout is None or ann is None for cout, ann in argss):
+                return [None] * len(bargs)
+            remote_by = [
+                [its for its in ann["announced"] if its not in cout["cnt"]]
+                for cout, ann in argss
+            ]
+            t0 = time.perf_counter()
+            sups = fused_count_sites([sites[i] for i in bargs], remote_by, backend=backend)
+            dt = time.perf_counter() - t0
+            if any(remote_by):
+                acc["remote"] += dt
+                acc["total"] += dt
+            outs = []
+            for (cout, _ann), remote, sup in zip(argss, remote_by, sups):
+                if remote:
+                    comm.count_calls += 1
+                    for its, c in zip(remote, np.asarray(sup)):
+                        cout["cnt"][its] = int(c)
+                outs.append({"cnt": cout["cnt"], "n_remote": len(remote)})
+            return outs
+
+        return fused
+
     def decide_fn(level):
         def fn(ann, *remotes):
             if ann is None:
@@ -267,6 +333,8 @@ def fdm_site_jobs(
 
     for level in range(1, k + 1):
         prev_dep = [f"decide_{level - 1}"] if level > 1 else []
+        count_batched_fn = timed_batch(count_batched(level), measured)
+        remote_batched_fn = timed_batch(remote_batched(level), measured)
         for i in range(s):
             jobs.append(
                 SiteJob(
@@ -274,6 +342,9 @@ def fdm_site_jobs(
                     fn=timed(count_fn(level, i), measured, f"count_{level}_{i}"),
                     deps=list(prev_dep),
                     site=i,  # GridModel.transfer_s normalizes to its link matrix
+                    batch_key=f"count_{level}",
+                    batched_fn=count_batched_fn,
+                    batch_arg=i,
                 )
             )
         jobs.append(
@@ -290,6 +361,9 @@ def fdm_site_jobs(
                     fn=timed(remote_fn(level, i), measured, f"remote_{level}_{i}"),
                     deps=[f"count_{level}_{i}", f"announce_{level}"],
                     site=i,  # GridModel.transfer_s normalizes to its link matrix
+                    batch_key=f"remote_{level}",
+                    batched_fn=remote_batched_fn,
+                    batch_arg=i,
                 )
             )
         jobs.append(

@@ -35,7 +35,9 @@ from repro.core.apriori import (
     Itemset,
     LocalMineResult,
     TransactionDB,
+    batched_local_apriori,
     count_supports,
+    fused_count_sites,
     local_apriori,
     subsets_of,
 )
@@ -244,8 +246,16 @@ def gfm_site_jobs(
     schedulers are safe: under ``schedule="async"`` the dependency edges
     alone order every CommLog mutation (pool after all aprioris, decide
     after all recounts), and speculation never re-executes a job's fn.
+
+    The per-site fan-outs (``apriori_i``, ``recount_i``) also carry
+    ``batch_key``/``batched_fn`` hooks: under the ``batched`` execution
+    backend phase 1 runs as lockstep level rounds with one fused
+    site-axis count dispatch per level (``batched_local_apriori``), and
+    the missing-support recounts as one fused dispatch total
+    (``fused_count_sites``) — result- and ledger-identical to the
+    per-site loop.
     """
-    from repro.workflow.sitejob import SiteJob, timed
+    from repro.workflow.sitejob import SiteJob, timed, timed_batch
 
     s = len(sites)
     n_total = sum(db.n_tx for db in sites)
@@ -263,6 +273,11 @@ def gfm_site_jobs(
 
         return fn
 
+    def apriori_batched(bargs, argss):
+        dbs = [sites[i] for i in bargs]
+        mins = [int(np.ceil(l_ratio * db.n_tx)) for db in dbs]
+        return batched_local_apriori(dbs, k, mins, backend=backend)
+
     for i in range(s):
         jobs.append(
             SiteJob(
@@ -270,6 +285,9 @@ def gfm_site_jobs(
                 fn=timed(apriori_fn(i), measured, f"apriori_{i}"),
                 site=i,  # GridModel.transfer_s normalizes to its link matrix
                 input_bytes=int(np.asarray(sites[i].packed).nbytes),
+                batch_key="apriori",
+                batched_fn=timed_batch(apriori_batched, measured),
+                batch_arg=i,
             )
         )
 
@@ -300,6 +318,22 @@ def gfm_site_jobs(
 
         return fn
 
+    def recount_batched(bargs, argss):
+        # every member shares the same "pool" dependency; each brings its
+        # own site's LocalMineResult
+        pool = argss[0][1]
+        lms = [lm for lm, _pool in argss]
+        missing_by = [[its for its in pool if its not in lm.counts] for lm in lms]
+        sups = fused_count_sites([sites[i] for i in bargs], missing_by, backend=backend)
+        outs = []
+        for lm, missing, sup in zip(lms, missing_by, sups):
+            if missing:
+                for its, c in zip(missing, sup):
+                    lm.counts[its] = int(c)
+                comm.count_calls += 1
+            outs.append((lm, len(missing)))
+        return outs
+
     for i in range(s):
         jobs.append(
             SiteJob(
@@ -307,6 +341,9 @@ def gfm_site_jobs(
                 fn=timed(recount_fn(i), measured, f"recount_{i}"),
                 deps=[f"apriori_{i}", "pool"],
                 site=i,  # GridModel.transfer_s normalizes to its link matrix
+                batch_key="recount",
+                batched_fn=timed_batch(recount_batched, measured),
+                batch_arg=i,
             )
         )
 

@@ -238,6 +238,22 @@ def _site_local(key, x, cfg: VClusterConfig):
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
+def _site_local_batch(keys, xs, cfg: VClusterConfig):
+    """Fused fan-out: per-site K-Means for every site in ONE vmapped
+    dispatch — what the batched execution backend calls instead of the
+    per-site host loop."""
+    return jax.vmap(lambda k, x: _site_local(k, x, cfg))(keys, xs)
+
+
+@functools.partial(jax.jit, static_argnames=("b",))
+def _perturb_batch(xs, slots, merged: MergeResult, b: int):
+    """Fused fan-out: border perturbation for every site in ONE vmapped
+    dispatch (site-local by construction — the merged stats are
+    replicated, exactly as in the pooled driver)."""
+    return jax.vmap(lambda x, s: perturb_site(x, s, merged, b)[0])(xs, slots)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
 def vcluster_pooled(key: jax.Array, xs: jax.Array, cfg: VClusterConfig = VClusterConfig()) -> VClusterResult:
     """Reference driver: xs is (s, n, D) — s sites' datasets stacked.
 
@@ -321,8 +337,13 @@ def vcluster_site_jobs(
     All jobs return TimedResults, so the engine's grid clock is advanced by
     real measured kernel time; ``measured`` (if given) receives the same
     numbers for cross-checking the engine's ledger.
+
+    The per-site fan-outs (``cluster_i``, ``perturb_i``) also carry
+    ``batch_key``/``batched_fn`` hooks: under the ``batched`` execution
+    backend the whole fan-out runs as ONE vmapped dispatch across the
+    site axis, with the measured batch time apportioned per job.
     """
-    from repro.workflow.sitejob import SiteJob, timed
+    from repro.workflow.sitejob import SiteJob, timed, timed_batch
 
     xs = jnp.asarray(xs)
     s, n, d = xs.shape
@@ -339,6 +360,14 @@ def vcluster_site_jobs(
 
         return fn
 
+    def cluster_batched(bargs, argss):
+        idx = jnp.asarray(bargs, dtype=jnp.int32)
+        assigns, st = _site_local_batch(keys[idx], xs[idx], cfg)
+        return [
+            (assigns[j], SuffStats(sizes=st.sizes[j], centers=st.centers[j], sse=st.sse[j]))
+            for j in range(len(bargs))
+        ]
+
     for i in range(s):
         jobs.append(
             SiteJob(
@@ -347,6 +376,9 @@ def vcluster_site_jobs(
                 site=i,  # GridModel.transfer_s normalizes to its link matrix
                 input_bytes=int(xs[i].nbytes),
                 output_bytes=stats_nbytes,
+                batch_key="cluster",
+                batched_fn=timed_batch(cluster_batched, measured),
+                batch_arg=i,
             )
         )
 
@@ -376,6 +408,14 @@ def vcluster_site_jobs(
 
         return fn
 
+    def perturb_batched(bargs, argss):
+        merged = argss[0][1]  # same "merge" dependency for every member
+        idx = jnp.asarray(bargs, dtype=jnp.int32)
+        assigns = jnp.stack([site_out[0] for site_out, _ in argss])
+        slots = assigns + (idx * jnp.int32(k))[:, None]
+        labels = _perturb_batch(xs[idx], slots, merged, cfg.border_candidates)
+        return [labels[j] for j in range(len(bargs))]
+
     for i in range(s):
         jobs.append(
             SiteJob(
@@ -384,6 +424,9 @@ def vcluster_site_jobs(
                 deps=[f"cluster_{i}", "merge"],
                 site=i,  # GridModel.transfer_s normalizes to its link matrix
                 output_bytes=n * 4,  # int32 point labels staged back
+                batch_key="perturb",
+                batched_fn=timed_batch(perturb_batched, measured),
+                batch_arg=i,
             )
         )
 

@@ -1,3 +1,10 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+
+
+def pad_to(x: int, m: int) -> int:
+    """Round ``x`` up to the next multiple of ``m`` — the one padding
+    rule shared by the kernel entry points (auto-padding N/C to block
+    multiples) and the ops wrappers (lane-padding D/K to 128)."""
+    return ((x + m - 1) // m) * m

@@ -22,6 +22,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import pad_to
+
 BIG = 1e30  # sentinel coordinate for padded center rows
 
 
@@ -41,16 +43,24 @@ def _kernel(x_ref, c_ref, assign_ref, mind2_ref):
 
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
 def kmeans_assign_pallas(
-    x: jax.Array,  # (N, D) f32 — N % block_n == 0, D % 128 == 0
+    x: jax.Array,  # (N, D) f32 — any N (auto-padded to block_n), D % 128 == 0
     centers: jax.Array,  # (K, D) f32 — K % 128 == 0, padded rows = BIG
     block_n: int = 256,
     interpret: bool = False,
 ) -> tuple[jax.Array, jax.Array]:
+    """Assignment for arbitrary N: points are auto-padded to the block
+    multiple with zero rows whose outputs are sliced away before
+    returning (padded rows cost compute, never correctness).  Block-
+    multiple inputs take the original zero-copy path bit-for-bit.  The
+    D/K lane-padding contract (zero columns, +BIG sentinel center rows)
+    remains the wrapper's job — see ``ops.kmeans_assign``."""
     n, d = x.shape
     k, d2_ = centers.shape
-    assert d == d2_ and n % block_n == 0, (x.shape, centers.shape, block_n)
-    grid = (n // block_n,)
-    return pl.pallas_call(
+    assert d == d2_, (x.shape, centers.shape)
+    np_ = pad_to(max(n, block_n), block_n)
+    x_p = x if np_ == n else jnp.zeros((np_, d), x.dtype).at[:n].set(x)
+    grid = (np_ // block_n,)
+    assign, mind2 = pl.pallas_call(
         _kernel,
         grid=grid,
         in_specs=[
@@ -62,8 +72,9 @@ def kmeans_assign_pallas(
             pl.BlockSpec((block_n,), lambda i: (i,)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((n,), jnp.int32),
-            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((np_,), jnp.int32),
+            jax.ShapeDtypeStruct((np_,), jnp.float32),
         ],
         interpret=interpret,
-    )(x, centers)
+    )(x_p, centers)
+    return assign[:n], mind2[:n]

@@ -10,7 +10,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ref
+from repro.kernels import pad_to, ref
 from repro.kernels.kmeans_assign import BIG, kmeans_assign_pallas
 from repro.kernels.support_count import support_count_pallas
 
@@ -19,54 +19,34 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def _pad_to(x: int, m: int) -> int:
-    return ((x + m - 1) // m) * m
-
-
 def kmeans_assign(x: jax.Array, centers: jax.Array, block_n: int = 256) -> tuple[jax.Array, jax.Array]:
     """Nearest-center assignment.  x (N, D), centers (K, D) ->
-    (assign (N,) int32, min_d2 (N,) f32).  Pads N to the block, D and K to
-    the 128-lane boundary per the kernel contract."""
+    (assign (N,) int32, min_d2 (N,) f32).  Pads D and K to the 128-lane
+    boundary per the kernel contract (the kernel auto-pads N itself)."""
     n, d = x.shape
     k, _ = centers.shape
-    dp = _pad_to(max(d, 128), 128)
-    kp = _pad_to(max(k, 128), 128)
-    np_ = _pad_to(n, block_n)
-    xp = jnp.zeros((np_, dp), jnp.float32).at[:n, :d].set(x.astype(jnp.float32))
+    dp = pad_to(max(d, 128), 128)
+    kp = pad_to(max(k, 128), 128)
+    xp = jnp.zeros((n, dp), jnp.float32).at[:, :d].set(x.astype(jnp.float32))
     # padded center rows sit at +BIG so they never win the argmin;
     # padded D columns are zero in both operands (distance unchanged)
     cp = jnp.full((kp, dp), 0.0, jnp.float32)
     cp = cp.at[:, :d].set(jnp.full((kp, d), BIG, jnp.float32))
     cp = cp.at[:k, :d].set(centers.astype(jnp.float32))
-    assign, mind2 = kmeans_assign_pallas(xp, cp, block_n=block_n, interpret=not _on_tpu())
-    return assign[:n], mind2[:n]
+    return kmeans_assign_pallas(xp, cp, block_n=block_n, interpret=not _on_tpu())
 
 
 def support_count(tx_packed: jax.Array, masks: jax.Array, block_n: int = 512, block_c: int = 512) -> jax.Array:
     """Support counts.  tx_packed (N, W) uint32, masks (C, W) uint32 ->
-    (C,) int32.  Transposes to the kernel's (W, ·) lane layout and pads N/C
-    to their blocks (padded transactions are all-zero rows, padded
-    candidates all-zero masks — the all-zero mask matches everything, but
-    padded outputs are sliced away before returning)."""
+    (C,) int32.  Transposes to the kernel's (W, ·) lane layout; the
+    kernel auto-pads N/C to its blocks (padded transactions count zero
+    support, padded candidate outputs are sliced away)."""
     n, w = tx_packed.shape
     c, w2 = masks.shape
     assert w == w2
-    np_ = _pad_to(max(n, block_n), block_n)
-    cp_ = _pad_to(max(c, block_c), block_c)
-    tx_t = jnp.zeros((w, np_), jnp.int32).at[:, :n].set(
-        jax.lax.bitcast_convert_type(tx_packed.astype(jnp.uint32), jnp.int32).T
-    )
-    # padded transactions must match NO candidate: give them an impossible
-    # sentinel of 0 while candidates padded as 0 match everything — so we
-    # must instead make padded *transactions* all-zero and rely on padded
-    # candidate outputs being sliced off; a zero mask over zero tx rows
-    # still "matches", so subtract the pad count for real candidates with
-    # empty masks (can't occur: itemsets are non-empty by construction).
-    mk_t = jnp.zeros((w, cp_), jnp.int32).at[:, :c].set(
-        jax.lax.bitcast_convert_type(masks.astype(jnp.uint32), jnp.int32).T
-    )
-    out = support_count_pallas(tx_t, mk_t, block_n=block_n, block_c=block_c, interpret=not _on_tpu())
-    return out[:c]
+    tx_t = jax.lax.bitcast_convert_type(tx_packed.astype(jnp.uint32), jnp.int32).T
+    mk_t = jax.lax.bitcast_convert_type(masks.astype(jnp.uint32), jnp.int32).T
+    return support_count_pallas(tx_t, mk_t, block_n=block_n, block_c=block_c, interpret=not _on_tpu())
 
 
 def flash_attention(
@@ -90,9 +70,9 @@ def flash_attention(
 
     b, sq, h, dh = q.shape
     _, skv, kvh, _ = k.shape
-    tq = min(block_q, _pad_to(sq, 8))
-    tk = min(block_k, _pad_to(skv, 8))
-    sqp, skp = _pad_to(sq, tq), _pad_to(skv, tk)
+    tq = min(block_q, pad_to(sq, 8))
+    tk = min(block_k, pad_to(skv, 8))
+    sqp, skp = pad_to(sq, tq), pad_to(skv, tk)
     # padded keys are masked by causality (k_pos >= skv > any real q_pos);
     # without causality there is no mask to hide them
     assert causal or skp == skv, "non-causal flash requires Skv % block_k == 0"
@@ -131,6 +111,29 @@ def slstm_scan(wx: jax.Array, r: jax.Array, bias: jax.Array, state0, t_chunk: in
         jnp.moveaxis(wx, 1, 0), r, bias, c0, n0, h0, t_chunk=tc, interpret=not _on_tpu()
     )
     return jnp.moveaxis(hids, 0, 1), (cT, nT, hT)
+
+
+def support_count_sites(tx_packed_s: jax.Array, masks_s: jax.Array) -> jax.Array:
+    """Fused site-axis support counting: ONE dispatch for S sites.
+
+    tx_packed_s (S, N, W) uint32, masks_s (S, C, W) uint32 -> (S, C)
+    int32 — the vmapped form of :func:`support_count` (vmap lifts the
+    Pallas grid by one site dimension, so the whole fan-out runs as a
+    single kernel launch instead of S host-loop dispatches).  Per-site
+    padding semantics are unchanged.
+    """
+    return jax.vmap(support_count)(tx_packed_s, masks_s)
+
+
+def kmeans_assign_sites(
+    xs: jax.Array, centers_s: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Fused site-axis K-Means assignment: ONE dispatch for S sites.
+
+    xs (S, N, D), centers_s (S, K, D) -> (assign (S, N) int32,
+    min_d2 (S, N) f32) — the vmapped form of :func:`kmeans_assign`.
+    """
+    return jax.vmap(kmeans_assign)(xs, centers_s)
 
 
 # re-export oracles for convenience

@@ -24,6 +24,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import pad_to
+
 
 def _kernel(tx_ref, mask_ref, out_ref):
     w = tx_ref.shape[0]
@@ -53,11 +55,22 @@ def support_count_pallas(
     block_c: int = 512,
     interpret: bool = False,
 ) -> jax.Array:
+    """Support counts for arbitrary (N, C): inputs are auto-padded to the
+    block multiples.  Padded transactions are all-zero words, which match
+    no non-empty mask; an all-zero (empty-itemset) mask WOULD match them,
+    so its count is corrected by the pad row count after the kernel —
+    padded rows therefore contribute zero support to every candidate.
+    Padded candidate columns are sliced away before returning.  Block-
+    multiple inputs take the original zero-copy path bit-for-bit."""
     w, n = tx_t.shape
     w2, c = masks_t.shape
-    assert w == w2 and n % block_n == 0 and c % block_c == 0
-    grid = (c // block_c, n // block_n)  # N innermost → sequential accumulation
-    return pl.pallas_call(
+    assert w == w2, f"word-width mismatch: transactions {w} vs masks {w2}"
+    np_ = pad_to(max(n, block_n), block_n)
+    cp_ = pad_to(max(c, block_c), block_c)
+    tx_p = tx_t if np_ == n else jnp.zeros((w, np_), tx_t.dtype).at[:, :n].set(tx_t)
+    mk_p = masks_t if cp_ == c else jnp.zeros((w, cp_), masks_t.dtype).at[:, :c].set(masks_t)
+    grid = (cp_ // block_c, np_ // block_n)  # N innermost → sequential accumulation
+    out = pl.pallas_call(
         _kernel,
         grid=grid,
         in_specs=[
@@ -65,6 +78,10 @@ def support_count_pallas(
             pl.BlockSpec((w, block_c), lambda i, j: (0, i)),
         ],
         out_specs=pl.BlockSpec((block_c,), lambda i, j: (i,)),
-        out_shape=jax.ShapeDtypeStruct((c,), jnp.int32),
+        out_shape=jax.ShapeDtypeStruct((cp_,), jnp.int32),
         interpret=interpret,
-    )(tx_t, masks_t)
+    )(tx_p, mk_p)[:c]
+    if np_ != n:
+        empty_mask = jnp.all(masks_t == 0, axis=0)  # matches the zero pad rows
+        out = out - jnp.where(empty_mask, jnp.int32(np_ - n), jnp.int32(0))
+    return out

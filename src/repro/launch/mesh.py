@@ -42,6 +42,67 @@ def make_variant_mesh(name: str, *, multi_pod: bool = False):
     raise KeyError(name)
 
 
+def init_multihost(
+    coordinator_address: str | None = None,
+    num_processes: int | None = None,
+    process_id: int | None = None,
+    cpu_collectives: str = "gloo",
+) -> bool:
+    """Initialize ``jax.distributed`` for a multi-process (multi-host)
+    mesh; returns True when this jax runtime is multi-process afterwards.
+
+    Idempotent: already-initialized runtimes (or single-process calls
+    with no coordinator) return without touching jax state.  On CPU the
+    cross-process collective implementation is selected BEFORE backend
+    init (``gloo`` ships with jaxlib and makes psum/all_gather work
+    across host processes — the two-subprocess smoke test exercises it);
+    TPU/GPU runtimes ignore the flag.
+    """
+    if coordinator_address is None and num_processes is None:
+        # nothing to initialize: report the launcher-provided topology
+        # (safe to touch the backend here — no distributed init follows)
+        return jax.process_count() > 1
+    # ORDER MATTERS: jax.distributed.initialize must run before ANY jax
+    # computation/backend query (jax.devices, jax.process_count, jit),
+    # so the collective flag is set first and the backend only queried
+    # after init.
+    if cpu_collectives:
+        try:
+            jax.config.update("jax_cpu_collectives_implementation", cpu_collectives)
+        except Exception:
+            pass  # older jaxlib: collectives stay single-process
+    try:
+        jax.distributed.initialize(
+            coordinator_address=coordinator_address,
+            num_processes=num_processes,
+            process_id=process_id,
+        )
+    except RuntimeError as e:
+        # idempotence: a runtime initialized by the launcher (or an
+        # earlier backend) is fine; anything else is a real error
+        if "already" not in str(e):
+            raise
+    return jax.process_count() > 1
+
+
+def make_multihost_mesh(n_sites: int | None = None, axis: str = "sites"):
+    """1-D grid-site mesh over the GLOBAL device set of a multi-process
+    runtime (``init_multihost`` first) — the multi-host counterpart of
+    ``make_site_mesh``: every process sees the same mesh spanning every
+    host's devices, so the same SiteJob DAGs and shard_map collectives
+    distribute across hosts for real.
+
+    ``n_sites=None`` uses every global device; otherwise the first
+    ``n_sites`` (None is returned when the global runtime is too small,
+    matching ``make_site_mesh``'s fallback contract).
+    """
+    devs = jax.devices()
+    n = len(devs) if n_sites is None else n_sites
+    if n < 1 or len(devs) < n:
+        return None
+    return jax.make_mesh((n,), (axis,), devices=devs[:n])
+
+
 def make_site_mesh(n_sites: int, axis: str = "sites"):
     """1-D grid-site mesh for the mining runtime (one device per paper
     "site"), or None when the host exposes fewer devices than sites —

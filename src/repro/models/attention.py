@@ -14,7 +14,7 @@ import math
 import jax
 import jax.numpy as jnp
 
-from repro.models.layers import apply_rope, norm_spec, apply_norm, softcap, spec
+from repro.models.layers import apply_norm, apply_rope, norm_spec, softcap, spec
 from repro.sharding import constrain
 
 NEG = -1e30

@@ -7,6 +7,7 @@ end-to-end through ``workflow.engine.Engine`` on a real JAX device mesh,
 with measured kernel time calibrating the simulated grid clock.
 """
 
+from repro.runtime.backends import MultiHostBackend
 from repro.runtime.gridruntime import GridRuntime, RuntimeRun
 
-__all__ = ["GridRuntime", "RuntimeRun"]
+__all__ = ["GridRuntime", "MultiHostBackend", "RuntimeRun"]

@@ -1,0 +1,110 @@
+"""Multi-host execution backend — the ``jax.distributed`` mesh scaffold.
+
+ROADMAP follow-on (a): swap the single-process site mesh for a
+multi-process one so the same SiteJob DAGs distribute for real.  This
+module is the scaffold for that swap: :class:`MultiHostBackend` brings
+up the distributed runtime (``launch.mesh.init_multihost``), builds the
+global device mesh spanning every host (``make_multihost_mesh``), and
+executes the workflow SPMD-redundantly — every process runs the same DAG
+over the same inputs, which is the paper's "logical merge" redundancy
+applied to the whole workflow: deterministic job callables make every
+process's results identical without any cross-process result shipping,
+while mesh collectives (all_gather under shard_map) already span hosts.
+
+What this scaffold gives the next PR:
+  * process bring-up + global mesh construction behind one object;
+  * a CPU two-subprocess smoke path (gloo collectives) exercised in CI,
+    so the multi-process plumbing cannot rot;
+  * the ``ExecutionBackend.call`` seam where per-site jobs will be
+    routed to their owning process (site % process_count) once results
+    ship via ``process_allgather`` instead of running redundantly.
+
+Single-process fallback: without a coordinator the backend degrades to
+inline execution over the local devices — same results, no distributed
+state touched — so ``Engine(backend="multihost")`` is safe everywhere.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.launch.mesh import init_multihost, make_multihost_mesh
+from repro.workflow.dag import Job
+from repro.workflow.executor import ExecutionBackend
+
+
+class MultiHostBackend(ExecutionBackend):
+    """SPMD-redundant DAG execution over a ``jax.distributed`` mesh.
+
+    Parameters mirror ``jax.distributed.initialize``; all-None (the
+    default) means "join an already-initialized runtime, or run
+    single-process" — the backend never guesses a coordinator.
+    """
+
+    name = "multihost"
+
+    def __init__(
+        self,
+        coordinator_address: str | None = None,
+        num_processes: int | None = None,
+        process_id: int | None = None,
+        axis: str = "sites",
+    ):
+        self.coordinator_address = coordinator_address
+        self.num_processes = num_processes
+        self.process_id = process_id
+        self.axis = axis
+        self._ready = False
+        self.is_multiprocess = False
+        self.mesh = None
+
+    def _ensure(self) -> None:
+        """Bring up the distributed runtime and the global mesh once."""
+        if self._ready:
+            return
+        self.is_multiprocess = init_multihost(
+            coordinator_address=self.coordinator_address,
+            num_processes=self.num_processes,
+            process_id=self.process_id,
+        )
+        self.mesh = make_multihost_mesh(axis=self.axis)
+        self._ready = True
+
+    def describe(self) -> dict:
+        """Scaffold introspection (the smoke test's assertions): process
+        topology and the global mesh this backend executes over."""
+        self._ensure()
+        return {
+            "is_multiprocess": self.is_multiprocess,
+            "process_index": jax.process_index(),
+            "process_count": jax.process_count(),
+            "n_global_devices": len(jax.devices()),
+            "n_local_devices": len(jax.local_devices()),
+            "mesh_shape": dict(self.mesh.shape) if self.mesh is not None else None,
+            "axis": self.axis,
+        }
+
+    def allgather_check(self, value: float) -> np.ndarray:
+        """Cross-process collective smoke: gather one scalar per process
+        (identity on a single process).  This is the wire the next PR
+        ships per-site results over."""
+        self._ensure()
+        arr = np.asarray([value], dtype=np.float32)
+        if not self.is_multiprocess:
+            return arr[None]
+        from jax.experimental.multihost_utils import process_allgather
+
+        return np.asarray(process_allgather(arr))
+
+    def begin_run(self, dag, results) -> None:
+        self._ensure()
+
+    def call(self, job: Job, args: list) -> Any:
+        # SPMD-redundant: every process executes every job over the
+        # global mesh.  Deterministic callables => identical results on
+        # every process (the paper's logical-merge property), so no
+        # cross-process result staging is needed yet.
+        return job.fn(*args)

@@ -31,15 +31,16 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.compat import shard_map
 from repro.core.fdm import fdm_site_jobs
 from repro.core.gfm import gfm_site_jobs
+from repro.core.stats import SuffStats
 from repro.core.vclustering import (
     MergeResult,
     VClusterConfig,
     merge_gathered,
     vcluster_site_jobs,
 )
-from repro.core.stats import SuffStats
 from repro.launch.mesh import make_site_mesh
 from repro.workflow.engine import Engine, RunReport
+from repro.workflow.executor import ExecutionBackend
 from repro.workflow.overhead import (
     GridModel,
     estimate_dag,
@@ -48,6 +49,16 @@ from repro.workflow.overhead import (
 )
 from repro.workflow.placement import resolve_placement
 from repro.workflow.sitejob import job_specs
+
+
+def _backend_differs(backend: str | ExecutionBackend, engine: Engine) -> bool:
+    """Whether a requested backend requires rebuilding the engine.  An
+    instance is honored by IDENTITY (a configured BatchedBackend with a
+    custom min_batch must not be silently dropped just because its name
+    matches); a name is compared as a string — no throwaway instance."""
+    if isinstance(backend, ExecutionBackend):
+        return backend is not engine.backend
+    return backend != engine.backend.name
 
 
 @dataclass
@@ -62,6 +73,7 @@ class RuntimeRun:
     sync_mode: str = "pooled"  # how the single synchronization executed
     schedule: str = "staged"  # which engine scheduler executed the DAG
     placement: str = "fixed"  # which matchmaking policy placed the jobs
+    backend: str = "inline"  # which execution backend ran the callables
     # the analytical view of the DAG that was actually executed (deps,
     # bytes, the sites the policy actually chose, measured compute) —
     # feed to overhead.estimate_* or sitejob.replay_dag; the sweep
@@ -102,24 +114,29 @@ class GridRuntime:
         count_backend: str = "kernel",
         schedule: str | None = None,
         placement: str | None = None,
+        backend: str | ExecutionBackend | None = None,
     ):
         if sync not in ("auto", "shard_map", "pooled"):
             raise ValueError(f"unknown sync mode {sync!r}")
-        # ``schedule`` / ``placement`` thread the engine's scheduler mode
-        # ("staged" | "async") and matchmaking policy ("fixed" |
-        # "round_robin" | "random" | "greedy_eta") through the runtime;
-        # None keeps the given engine's own settings (or the Engine
-        # defaults) untouched.  A caller-supplied engine is never mutated
-        # — a differing schedule/placement gets an equivalent engine.
+        # ``schedule`` / ``placement`` / ``backend`` thread the engine's
+        # scheduler mode ("staged" | "async"), matchmaking policy
+        # ("fixed" | "round_robin" | "random" | "greedy_eta") and
+        # execution backend ("inline" | "batched" | "multihost") through
+        # the runtime; None keeps the given engine's own settings (or the
+        # Engine defaults) untouched.  A caller-supplied engine is never
+        # mutated — a differing setting gets an equivalent engine.
         if engine is None:
             engine = Engine(
                 model=GridModel(),
                 overlap_prep=True,
                 schedule=schedule or "staged",
                 placement=placement or "fixed",
+                backend=backend or "inline",
             )
-        elif (schedule is not None and engine.schedule != schedule) or (
-            placement is not None and resolve_placement(engine.placement).name != placement
+        elif (
+            (schedule is not None and engine.schedule != schedule)
+            or (placement is not None and resolve_placement(engine.placement).name != placement)
+            or (backend is not None and _backend_differs(backend, engine))
         ):
             engine = Engine(
                 model=engine.model,
@@ -129,6 +146,7 @@ class GridRuntime:
                 straggler_factor=engine.straggler_factor,
                 schedule=schedule or engine.schedule,
                 placement=placement if placement is not None else engine.placement,
+                backend=backend if backend is not None else engine.backend,
                 trace=engine.trace,
             )
         self.engine = engine
@@ -202,6 +220,7 @@ class GridRuntime:
             sync_mode=sync_mode,
             schedule=rep.schedule,
             placement=rep.placement,
+            backend=rep.backend,
             specs=specs,
             estimated_s=estimate_dag(specs, model),
             estimated_staged_s=estimate_stages_from_specs(specs, model),

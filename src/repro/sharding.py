@@ -9,8 +9,8 @@ rules table serves all 10 architectures.
 from __future__ import annotations
 
 import math
+from collections.abc import Mapping, Sequence
 from dataclasses import dataclass, field
-from typing import Mapping, Sequence
 
 import jax
 from jax.sharding import Mesh, NamedSharding

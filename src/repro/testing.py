@@ -14,7 +14,8 @@ from __future__ import annotations
 
 import functools
 import random
-from typing import Any, Callable
+from collections.abc import Callable
+from typing import Any
 
 
 class _Strategy:

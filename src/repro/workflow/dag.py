@@ -8,8 +8,9 @@ semantics.
 
 from __future__ import annotations
 
+from collections.abc import Callable
 from dataclasses import dataclass, field
-from typing import Any, Callable, NamedTuple
+from typing import Any, NamedTuple
 
 
 class TimedResult(NamedTuple):
@@ -38,6 +39,13 @@ class Job:
     retries: int = 2  # DAGMan-style automatic retry budget
     sim_compute_s: float = 0.0  # simulated compute (paper-scale what-if
     # studies); added to the simulated clock WITHOUT real sleeping
+    # execution-backend batching hooks (workflow.executor.BatchedBackend):
+    # jobs sharing a batch_key form one shape-identical fan-out group;
+    # batched_fn(names, batch_args, argss) executes the whole group in
+    # one fused call; batch_arg is this job's member payload (site index)
+    batch_key: str | None = None
+    batched_fn: Callable[..., Any] | None = None
+    batch_arg: Any = None
 
     # filled by the engine
     status: str = "pending"  # pending | running | done | failed

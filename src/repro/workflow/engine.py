@@ -40,6 +40,15 @@ The COMPUTE time of each job is measured for real (wall clock of fn());
 everything grid-related advances the simulated clock, so experiments are
 deterministic and reproducible — the property Grid'5000 was built to
 approximate and the paper laments ordinary grids lack.
+
+HOW a job's callable executes is delegated to a pluggable execution
+backend (``workflow.executor``): ``backend="inline"`` is the sequential
+host loop (default, bit-for-bit the original engine), ``"batched"``
+fuses ready shape-identical fan-out jobs into one vmapped device call,
+``"multihost"`` executes over a ``jax.distributed`` process mesh.  Both
+schedulers route every fn invocation through ``ExecutionBackend.call``;
+scheduling semantics (faults, retries, rescue, speculation, the clock)
+are backend-independent.
 """
 
 from __future__ import annotations
@@ -52,6 +61,7 @@ from dataclasses import dataclass, field
 from pathlib import Path
 
 from repro.workflow.dag import DAG, Job, TimedResult
+from repro.workflow.executor import ExecutionBackend, resolve_backend
 from repro.workflow.faults import FaultInjector
 from repro.workflow.overhead import GridModel
 from repro.workflow.placement import (
@@ -86,6 +96,8 @@ class RunReport:
     # the DAG's pre-assigned sites
     placement: str = "fixed"
     placements: dict = field(default_factory=dict)
+    # which execution backend ran the job callables (workflow.executor)
+    backend: str = "inline"
 
     @property
     def critical_path_s(self) -> float:
@@ -116,6 +128,7 @@ class Engine:
         straggler_factor: float = 0.0,  # 0 = no speculation
         schedule: str = "staged",
         placement: str | PlacementPolicy = "fixed",
+        backend: str | ExecutionBackend = "inline",
         trace: list | None = None,
     ):
         if schedule not in SCHEDULES:
@@ -128,6 +141,11 @@ class Engine:
         self.straggler_factor = straggler_factor
         self.schedule = schedule
         self.placement = placement
+        # how job callables execute (inline host loop / batched fused
+        # site-compute / multihost scaffold) — scheduler decisions are
+        # backend-independent; see workflow.executor
+        self.backend = resolve_backend(backend)
+        self._backend = self.backend  # per-run override lives here
         # optional observability hook: when a list is given, both
         # schedulers append (t, kind, job, site, site_busy_after) records
         # — the scheduler-invariant test suite audits these
@@ -167,15 +185,18 @@ class Engine:
         results: dict | None = None,
         schedule: str | None = None,
         placement: str | PlacementPolicy | None = None,
+        backend: str | ExecutionBackend | None = None,
     ) -> RunReport:
         schedule = schedule or self.schedule
         if schedule not in SCHEDULES:
             raise ValueError(f"unknown schedule {schedule!r}; expected one of {SCHEDULES}")
         policy = resolve_placement(placement if placement is not None else self.placement)
         policy.reset()  # per-run state (RNG, round-robin cursor)
+        self._backend = resolve_backend(backend) if backend is not None else self.backend
         dag.validate_acyclic()
-        rep = RunReport(schedule=schedule, placement=policy.name)
+        rep = RunReport(schedule=schedule, placement=policy.name, backend=self._backend.name)
         results = results if results is not None else {}
+        self._backend.begin_run(dag, results)
 
         # workflow preparation (the 295 s DAGMan latency).  With
         # overlap_prep the first stage's submission pipeline hides all but
@@ -594,7 +615,10 @@ class Engine:
                 continue  # DAGMan retry
             t0 = time.perf_counter()
             args = [results[d] for d in job.deps]
-            raw = job.fn(*args)
+            # the execution backend decides HOW fn runs (inline dispatch,
+            # fused batch, multihost mesh); scheduling semantics around it
+            # — faults, retries, rescue, the simulated clock — are ours
+            raw = self._backend.call(job, args)
             if isinstance(raw, TimedResult):
                 # the job measured its own device compute (SiteJob.timed);
                 # the grid clock is calibrated by real kernels, not by our

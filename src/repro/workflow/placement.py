@@ -35,8 +35,9 @@ reused policy (or engine) replays identically.
 from __future__ import annotations
 
 import random
+from collections.abc import Sequence
 from dataclasses import dataclass, field
-from typing import TYPE_CHECKING, Sequence
+from typing import TYPE_CHECKING
 
 if TYPE_CHECKING:  # pragma: no cover - import cycle guard (overhead -> placement)
     from repro.workflow.overhead import GridModel, JobSpec

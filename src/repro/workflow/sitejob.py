@@ -17,13 +17,20 @@ from __future__ import annotations
 
 import functools
 import time
+import warnings
+from collections.abc import Callable
 from dataclasses import dataclass, field
-from typing import Any, Callable
+from typing import Any
 
 import jax
 
 from repro.workflow.dag import DAG, Job, TimedResult
 from repro.workflow.overhead import JobSpec
+
+
+class MissingJobTimeWarning(UserWarning):
+    """A job fed to ``job_specs`` has no measured time — its analytical
+    compute defaults to 0.0, which silently miscalibrates estimates."""
 
 
 @dataclass
@@ -42,6 +49,15 @@ class SiteJob:
     input_bytes: int = 0
     output_bytes: int = 0
     retries: int = 2
+    # fused-execution hooks (``workflow.executor.BatchedBackend``): jobs
+    # sharing a ``batch_key`` are one shape-identical fan-out group;
+    # ``batched_fn(names, batch_args, argss)`` executes the whole group
+    # in one fused (vmapped) call and returns one TimedResult per member
+    # (see ``timed_batch``); ``batch_arg`` is this member's payload —
+    # for the site-job builders, the site index
+    batch_key: str | None = None
+    batched_fn: Callable[..., Any] | None = None
+    batch_arg: Any = None
 
     def to_job(self) -> Job:
         return Job(
@@ -52,6 +68,9 @@ class SiteJob:
             input_bytes=self.input_bytes,
             output_bytes=self.output_bytes,
             retries=self.retries,
+            batch_key=self.batch_key,
+            batched_fn=self.batched_fn,
+            batch_arg=self.batch_arg,
         )
 
 
@@ -74,6 +93,38 @@ def timed(fn: Callable[..., Any], record: dict[str, float] | None = None, name: 
         return TimedResult(out, dt)
 
     return wrapper
+
+
+def timed_batch(
+    fused_fn: Callable[..., list],
+    record: dict[str, float] | None = None,
+) -> Callable[..., list]:
+    """Wrap a fused group executor into a ``batched_fn`` for the batched
+    execution backend.
+
+    ``fused_fn(batch_args, argss) -> list`` computes every member's
+    result in one call (one vmapped dispatch across the site axis).
+    The wrapper measures the fused call ONCE (blocking on all jax
+    outputs, like ``timed``) and apportions the wall time equally across
+    the members — the honest per-site calibration for shape-identical
+    fan-out jobs, since the fused call does the same total work the
+    serial per-site loop would.  Each member's share is recorded in
+    ``record`` (the runtime's cross-check ledger) and returned as its
+    ``TimedResult``, so the engine's simulated clock, job_times, and
+    the analytical estimators see per-job times exactly as they do on
+    the inline backend.
+    """
+
+    def batched(names: list[str], batch_args: list, argss: list) -> list:
+        t0 = time.perf_counter()
+        outs = jax.block_until_ready(fused_fn(batch_args, argss))
+        share = (time.perf_counter() - t0) / max(len(names), 1)
+        if record is not None:
+            for name in names:
+                record[name] = share
+        return [TimedResult(out, share) for out in outs]
+
+    return batched
 
 
 def build_dag(site_jobs: list[SiteJob], name: str = "site-jobs") -> DAG:
@@ -112,12 +163,37 @@ def replay_dag(specs: list[JobSpec], job_times: dict[str, float] | None = None) 
     return dag
 
 
-def job_specs(site_jobs: list[SiteJob], job_times: dict[str, float] | None = None) -> list[JobSpec]:
+def job_specs(
+    site_jobs: list[SiteJob],
+    job_times: dict[str, float] | None = None,
+    strict: bool = False,
+) -> list[JobSpec]:
     """Strip SiteJobs down to the analytical ``overhead.JobSpec`` view,
     with compute times taken from a run's measured ``RunReport.job_times``
     — the inputs to ``estimate_dag`` / ``estimate_stages_from_specs``, so
     the paper's measured-vs-estimated comparison is calibrated by the same
-    kernel timings that fed the simulated clock."""
+    kernel timings that fed the simulated clock.
+
+    A job name with no measured time silently feeding ``compute_s=0.0``
+    into the estimators is exactly how a calibration goes quietly wrong,
+    so missing entries are loud: when ``job_times`` is given but lacks a
+    job, a ``MissingJobTimeWarning`` is emitted (or, with
+    ``strict=True``, a ``KeyError`` raised — also when ``job_times`` is
+    None entirely).  Passing ``job_times=None`` without ``strict`` keeps
+    the explicit "no calibration, zero-compute topology view" behavior,
+    warning-free."""
+    if strict and job_times is None:
+        raise KeyError("job_specs(strict=True) requires measured job_times, got None")
+    missing = [sj.name for sj in site_jobs if job_times is not None and sj.name not in job_times]
+    if missing:
+        msg = (
+            f"{len(missing)} job(s) have no measured time and default to compute_s=0.0 "
+            f"(miscalibrated estimate): {', '.join(missing[:5])}"
+            + ("..." if len(missing) > 5 else "")
+        )
+        if strict:
+            raise KeyError(msg)
+        warnings.warn(msg, MissingJobTimeWarning, stacklevel=2)
     times = job_times or {}
     return [
         JobSpec(

@@ -78,10 +78,10 @@ class TestAsyncAndRetention:
         """Full fault-tolerance loop: train, checkpoint, 'crash', restore,
         continue — the stream is pure in (seed, step) so the resumed run
         produces the identical state as an uninterrupted one."""
+        from repro.data.pipeline import TokenStream
         from repro.models.config import ModelConfig
         from repro.optim.adamw import AdamWConfig
         from repro.train.steps import make_train_step, materialize_state
-        from repro.data.pipeline import TokenStream
 
         cfg = ModelConfig(n_layers=2, d_model=32, n_heads=2, n_kv_heads=2, head_dim=16,
                           d_ff=64, vocab=64, dtype="float32", remat="none")

@@ -1,0 +1,310 @@
+"""Execution-backend layer: resolution, batched grouping semantics, and
+inline-vs-batched equivalence of the mining applications.
+
+The contract under test: backends change HOW job callables execute
+(dispatch fusion), never WHAT the scheduler decides — results, ledgers
+and fixed-placement scheduling fingerprints must be identical across
+backends.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.apriori import TransactionDB
+from repro.core.vclustering import VClusterConfig
+from repro.data.synthetic import (
+    gaussian_mixture,
+    ibm_transactions,
+    split_sites,
+    split_transactions,
+)
+from repro.runtime import GridRuntime
+from repro.workflow.dag import DAG, TimedResult
+from repro.workflow.engine import Engine
+from repro.workflow.executor import (
+    BACKENDS,
+    BatchedBackend,
+    ExecutionBackend,
+    InlineBackend,
+    resolve_backend,
+)
+from repro.workflow.faults import FaultInjector
+from repro.workflow.overhead import GridModel
+from repro.workflow.sitejob import MissingJobTimeWarning, SiteJob, job_specs, timed_batch
+
+
+class TestResolveBackend:
+    def test_names(self):
+        assert isinstance(resolve_backend("inline"), InlineBackend)
+        assert isinstance(resolve_backend("batched"), BatchedBackend)
+        assert resolve_backend("multihost").name == "multihost"
+        assert resolve_backend(None).name == "inline"
+
+    def test_instance_passthrough(self):
+        b = BatchedBackend()
+        assert resolve_backend(b) is b
+
+    def test_unknown_raises(self):
+        with pytest.raises(ValueError, match="unknown backend"):
+            resolve_backend("gpu-cluster")
+        with pytest.raises(ValueError, match="unknown backend"):
+            Engine(backend="gpu-cluster")
+
+    def test_registry_names(self):
+        assert BACKENDS == ("inline", "batched", "multihost")
+
+    def test_engine_default_is_inline(self):
+        eng = Engine(model=GridModel(prep_latency_s=0.0))
+        dag = DAG("d")
+        dag.job("a", lambda: 1)
+        rep = eng.run(dag)
+        assert rep.backend == "inline"
+
+    def test_min_batch_validation(self):
+        with pytest.raises(ValueError, match="min_batch"):
+            BatchedBackend(min_batch=0)
+
+    def test_runtime_honors_configured_backend_instance(self):
+        """A configured ExecutionBackend instance must survive the
+        GridRuntime engine rebuild even when its NAME matches the
+        engine's current backend."""
+        mine = BatchedBackend(min_batch=4)
+        rt = GridRuntime(
+            engine=Engine(model=GridModel(), backend="batched"),
+            sync="pooled", backend=mine,
+        )
+        assert rt.engine.backend is mine
+        # and a matching name as a string keeps the engine untouched
+        eng = Engine(model=GridModel(), backend="batched")
+        assert GridRuntime(engine=eng, sync="pooled", backend="batched").engine is eng
+
+
+def _fanout_dag(n=4, calls=None, record=None):
+    """n same-key leaf jobs + a collector; the fused fn counts its
+    invocations and which members each call covered."""
+    calls = calls if calls is not None else []
+
+    def fused(bargs, argss):
+        calls.append(tuple(bargs))
+        return [10 * i for i in bargs]
+
+    bf = timed_batch(fused, record)
+    dag = DAG("fanout")
+    for i in range(n):
+        dag.job(
+            f"leaf_{i}",
+            lambda i=i: TimedResult(10 * i, 0.0),
+            batch_key="leaf",
+            batched_fn=bf,
+            batch_arg=i,
+        )
+    dag.job("sum", lambda *xs: sum(xs), deps=[f"leaf_{i}" for i in range(n)])
+    return dag, calls
+
+
+class TestBatchedBackend:
+    @pytest.mark.parametrize("schedule", ["staged", "async"])
+    def test_one_fused_call_covers_fanout(self, schedule):
+        record = {}
+        dag, calls = _fanout_dag(4, record=record)
+        results = {}
+        eng = Engine(model=GridModel(prep_latency_s=0.0), schedule=schedule, backend="batched")
+        rep = eng.run(dag, results=results)
+        assert calls == [(0, 1, 2, 3)]  # ONE fused dispatch for the whole group
+        assert results["sum"] == 60
+        assert rep.backend == "batched"
+        # apportioning: every member gets the same share, ledgered in both
+        # job_times and the record dict
+        shares = {rep.job_times[f"leaf_{i}"] for i in range(4)}
+        assert len(shares) == 1
+        assert record == {f"leaf_{i}": rep.job_times["leaf_0"] for i in range(4)}
+
+    def test_singleton_falls_back_to_fn(self):
+        dag, calls = _fanout_dag(1)
+        eng = Engine(model=GridModel(prep_latency_s=0.0), backend="batched")
+        results = {}
+        eng.run(dag, results=results)
+        assert calls == []  # no vmap-of-one: plain fn path
+        assert results["leaf_0"] == 0
+
+    def test_min_batch_one_forces_fused_singleton(self):
+        """min_batch=1 pushes even a singleton group through batched_fn
+        (profiling the fused path) — the configured value is honored."""
+        dag, calls = _fanout_dag(1)
+        eng = Engine(
+            model=GridModel(prep_latency_s=0.0), backend=BatchedBackend(min_batch=1)
+        )
+        results = {}
+        eng.run(dag, results=results)
+        assert calls == [(0,)]
+        assert results["leaf_0"] == 0
+
+    def test_min_batch_threshold(self):
+        dag, calls = _fanout_dag(3)
+        eng = Engine(
+            model=GridModel(prep_latency_s=0.0), backend=BatchedBackend(min_batch=4)
+        )
+        results = {}
+        eng.run(dag, results=results)
+        assert calls == []  # group smaller than min_batch: inline path
+        assert results["sum"] == 30
+
+    def test_unready_peers_excluded(self):
+        """Same batch_key but one member's dependency has not produced a
+        result at fuse time: the fused call covers only the ready
+        members; the straggler later falls back to its own fn (a
+        singleton is never vmapped)."""
+        calls = []
+
+        def fused(bargs, argss):
+            calls.append(tuple(bargs))
+            return [100 + i for i in bargs]
+
+        bf = timed_batch(fused)
+        dag = DAG("staggered")
+        dag.job("a", lambda: TimedResult(101, 0.0), batch_key="g", batched_fn=bf, batch_arg=1)
+        dag.job("b", lambda: TimedResult(102, 0.0), batch_key="g", batched_fn=bf, batch_arg=2)
+        # "late" is inserted AFTER a/b, so when a executes (first in the
+        # stage loop) late has no result yet and c must be excluded
+        dag.job("late", lambda: TimedResult(0, 0.0))
+        dag.job(
+            "c", lambda r: TimedResult(103, 0.0), deps=["late"],
+            batch_key="g", batched_fn=bf, batch_arg=3,
+        )
+        results = {}
+        Engine(model=GridModel(prep_latency_s=0.0), backend="batched").run(dag, results=results)
+        assert calls == [(1, 2)]  # c excluded from the fuse, then singleton
+        assert results["a"] == 101 and results["b"] == 102 and results["c"] == 103
+
+    def test_mismatched_batch_output_raises(self):
+        def bad_fused(names, bargs, argss):
+            return [TimedResult(0, 0.0)]  # wrong arity
+
+        dag = DAG("bad")
+        dag.job("a", lambda: 0, batch_key="g", batched_fn=bad_fused, batch_arg=0)
+        dag.job("b", lambda: 0, batch_key="g", batched_fn=bad_fused, batch_arg=1)
+        with pytest.raises(RuntimeError, match="returned 1 results for 2"):
+            Engine(model=GridModel(prep_latency_s=0.0), backend="batched").run(dag)
+
+
+class TestBatchedWithFaults:
+    def test_retry_consumes_cached_result(self):
+        """An injected failure retries the job; the retry must consume
+        the batch-cached result, not re-execute the fused call."""
+        dag, calls = _fanout_dag(3)
+        eng = Engine(
+            model=GridModel(prep_latency_s=0.0),
+            faults=FaultInjector(fail={"leaf_1": 1}),
+            backend="batched",
+        )
+        results = {}
+        rep = eng.run(dag, results=results)
+        assert calls == [(0, 1, 2)]  # still exactly one fused dispatch
+        assert rep.retries == 1
+        assert results["sum"] == 30
+
+
+def _mining_inputs():
+    pts, _ = gaussian_mixture(0, 600, 2, 3, spread=10.0, sigma=0.7)
+    xs = split_sites(pts, 3, seed=1)
+    dense = ibm_transactions(seed=2, n_tx=300, n_items=18, avg_tx_len=6, n_patterns=6)
+    sites = [TransactionDB.from_dense(s) for s in split_transactions(dense, 3, seed=0)]
+    return xs, sites
+
+
+def scheduler_fingerprint(rep):
+    """What the scheduler decided, independent of measured compute: the
+    backend must not change any of it under fixed placement."""
+    return (
+        rep.schedule,
+        rep.placement,
+        tuple(sorted(rep.placements.items())),
+        rep.prep_s,
+        rep.submit_s,
+        rep.transfer_s,
+        rep.retries,
+        rep.speculative,
+        tuple(sorted(rep.job_times)),
+    )
+
+
+class TestBackendEquivalence:
+    """inline and batched must produce identical mining results and
+    identical fixed-placement scheduler fingerprints on both engine
+    schedulers — batching fuses dispatches, nothing else."""
+
+    @pytest.fixture(scope="class")
+    def runs(self):
+        xs, sites = _mining_inputs()
+        cfg = VClusterConfig(k_local=4, kmeans_iters=6, use_kernel=False)
+        out = {}
+        for schedule in ("staged", "async"):
+            for backend in ("inline", "batched"):
+                rt = GridRuntime(
+                    sync="pooled", use_kernel=False, count_backend="jnp",
+                    schedule=schedule, backend=backend,
+                )
+                out[(schedule, backend)] = (
+                    rt.run_vclustering(jax.random.PRNGKey(0), xs, cfg),
+                    rt.run_gfm(sites, 3, 0.1),
+                    rt.run_fdm(sites, 3, 0.1),
+                )
+        return out
+
+    @pytest.mark.parametrize("schedule", ["staged", "async"])
+    def test_identical_mining_results(self, runs, schedule):
+        vi, gi, fi = runs[(schedule, "inline")]
+        vb, gb, fb = runs[(schedule, "batched")]
+        assert np.array_equal(np.asarray(vi.result.labels), np.asarray(vb.result.labels))
+        assert int(vi.result.merged.n_global) == int(vb.result.merged.n_global)
+        assert gi.result.frequent == gb.result.frequent
+        assert gi.result.comm.rounds == gb.result.comm.rounds
+        assert gi.result.comm.bytes_sent == gb.result.comm.bytes_sent
+        assert gi.result.comm.count_calls == gb.result.comm.count_calls
+        assert fi.result.frequent == fb.result.frequent
+        assert fi.result.comm.rounds == fb.result.comm.rounds
+
+    @pytest.mark.parametrize("schedule", ["staged", "async"])
+    def test_identical_scheduler_fingerprints(self, runs, schedule):
+        for ri, rb in zip(runs[(schedule, "inline")], runs[(schedule, "batched")]):
+            assert scheduler_fingerprint(ri.report) == scheduler_fingerprint(rb.report)
+            assert ri.report.backend == "inline" and rb.report.backend == "batched"
+
+    def test_batched_measured_matches_ledger(self, runs):
+        """Apportioned batch shares must land in BOTH the runtime's
+        measured dict and the engine's job_times, equally."""
+        vb, gb, fb = runs[("staged", "batched")]
+        for run in (vb, gb, fb):
+            for name, dt in run.measured.items():
+                assert run.report.job_times[name] == pytest.approx(dt, rel=1e-9)
+
+
+class TestJobSpecsMissingTimes:
+    def _jobs(self):
+        return [
+            SiteJob(name="a", fn=lambda: 0),
+            SiteJob(name="b", fn=lambda: 0, deps=["a"]),
+        ]
+
+    def test_complete_times_no_warning(self, recwarn):
+        job_specs(self._jobs(), {"a": 1.0, "b": 2.0})
+        assert not [w for w in recwarn.list if issubclass(w.category, MissingJobTimeWarning)]
+
+    def test_missing_entry_warns(self):
+        with pytest.warns(MissingJobTimeWarning, match="b"):
+            specs = job_specs(self._jobs(), {"a": 1.0})
+        assert specs[1].compute_s == 0.0
+
+    def test_missing_entry_strict_raises(self):
+        with pytest.raises(KeyError, match="no measured time"):
+            job_specs(self._jobs(), {"a": 1.0}, strict=True)
+
+    def test_none_times_stays_silent(self, recwarn):
+        specs = job_specs(self._jobs(), None)
+        assert [sp.compute_s for sp in specs] == [0.0, 0.0]
+        assert not [w for w in recwarn.list if issubclass(w.category, MissingJobTimeWarning)]
+
+    def test_none_times_strict_raises(self):
+        with pytest.raises(KeyError, match="strict"):
+            job_specs(self._jobs(), None, strict=True)

@@ -8,7 +8,7 @@ import pytest
 
 from repro.compat import cost_analysis_dict
 from repro.roofline.analyze import roofline_terms
-from repro.roofline.hlo_costs import analyze_hlo, _parse_replica_groups
+from repro.roofline.hlo_costs import _parse_replica_groups, analyze_hlo
 
 
 def compile_text(fn, *args):

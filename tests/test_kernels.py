@@ -12,7 +12,9 @@ except ImportError:  # hermetic env: deterministic shim, no shrinking
 
 from repro.core.apriori import pack_bool_matrix, pack_itemsets
 from repro.kernels import ops
+from repro.kernels.kmeans_assign import BIG, kmeans_assign_pallas
 from repro.kernels.ref import kmeans_assign_ref, support_count_ref
+from repro.kernels.support_count import support_count_pallas
 
 
 class TestKMeansAssignKernel:
@@ -55,6 +57,34 @@ class TestKMeansAssignKernel:
         a_r, d_r = kmeans_assign_ref(x, c)
         assert np.array_equal(np.asarray(a_k), np.asarray(a_r))
 
+    def test_fused_site_axis(self):
+        """ops.kmeans_assign_sites — the vmapped site-axis form — must
+        match per-site ops.kmeans_assign calls exactly."""
+        rng = np.random.default_rng(4)
+        xs = jnp.asarray(rng.normal(size=(3, 70, 5)).astype(np.float32))
+        cs = jnp.asarray(rng.normal(size=(3, 6, 5)).astype(np.float32))
+        a_s, d_s = ops.kmeans_assign_sites(xs, cs)
+        assert a_s.shape == (3, 70) and d_s.shape == (3, 70)
+        for i in range(3):
+            a_i, d_i = ops.kmeans_assign(xs[i], cs[i])
+            assert np.array_equal(np.asarray(a_s[i]), np.asarray(a_i))
+            np.testing.assert_allclose(np.asarray(d_s[i]), np.asarray(d_i), rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("n", [1, 5, 129, 255, 256])
+    def test_pallas_entry_odd_n(self, n):
+        """The kernel entry point itself accepts arbitrary N (auto-pads
+        to the block and slices the pad rows away); D/K stay on the
+        lane-padding contract (zero columns, +BIG sentinel rows)."""
+        rng = np.random.default_rng(n)
+        x = jnp.asarray(rng.normal(size=(n, 128)).astype(np.float32))
+        c = jnp.full((128, 128), BIG, jnp.float32)
+        c = c.at[:9].set(jnp.asarray(rng.normal(size=(9, 128)).astype(np.float32)))
+        a_k, d_k = kmeans_assign_pallas(x, c, block_n=128, interpret=True)
+        a_r, d_r = kmeans_assign_ref(x, c[:9])
+        assert a_k.shape == (n,) and d_k.shape == (n,)
+        assert np.array_equal(np.asarray(a_k), np.asarray(a_r))
+        np.testing.assert_allclose(np.asarray(d_k), np.asarray(d_r), rtol=1e-3, atol=1e-3)
+
 
 class TestSupportCountKernel:
     @given(
@@ -93,6 +123,36 @@ class TestSupportCountKernel:
         want = support_count_ref(tx, masks)
         assert np.array_equal(np.asarray(got), np.asarray(want))
 
+    @pytest.mark.parametrize("n,c", [(1, 1), (7, 3), (511, 513), (700, 129), (512, 512)])
+    def test_pallas_entry_odd_shapes(self, n, c):
+        """The kernel entry point itself (not the ops wrapper) accepts
+        arbitrary non-block-multiple N/C by auto-padding: padded rows
+        count zero support."""
+        rng = np.random.default_rng(n * 1000 + c)
+        dense = rng.random((n, 40)) < 0.3
+        tx = pack_bool_matrix(dense)
+        sets = [
+            tuple(sorted(rng.choice(40, size=rng.integers(1, 4), replace=False).tolist()))
+            for _ in range(c)
+        ]
+        masks = pack_itemsets(sets, 40)
+        tx_t = jnp.asarray(tx.astype(np.int64).astype(np.int32)).T
+        mk_t = jnp.asarray(masks.astype(np.int64).astype(np.int32)).T
+        got = support_count_pallas(tx_t, mk_t, block_n=128, block_c=128, interpret=True)
+        want = support_count_ref(jnp.asarray(tx), jnp.asarray(masks))
+        assert got.shape == (c,)
+        assert np.array_equal(np.asarray(got), np.asarray(want))
+
+    def test_pallas_entry_empty_mask_pad_correction(self):
+        """An all-zero mask matches the zero pad rows; the kernel must
+        correct its count back to the true transaction count."""
+        rng = np.random.default_rng(0)
+        dense = rng.random((130, 32)) < 0.5
+        tx_t = jnp.asarray(pack_bool_matrix(dense).astype(np.int64).astype(np.int32)).T
+        mk_t = jnp.zeros((tx_t.shape[0], 2), jnp.int32)  # two empty itemsets
+        got = support_count_pallas(tx_t, mk_t, block_n=128, block_c=128, interpret=True)
+        np.testing.assert_array_equal(np.asarray(got), [130, 130])
+
     def test_wide_item_universe(self):
         """> 32 words (1024+ items) exercises the W loop."""
         rng = np.random.default_rng(3)
@@ -110,8 +170,8 @@ class TestSLSTMKernel:
     must match the sequential JAX reference bit-for-tolerance."""
 
     def _setup(self, seed, b, s, d, h):
-        from repro.models.config import ModelConfig
         from repro.models import xlstm as X
+        from repro.models.config import ModelConfig
         from repro.models.layers import init_from_specs
 
         cfg = ModelConfig(n_layers=1, d_model=d, n_heads=h, n_kv_heads=h,
@@ -154,7 +214,7 @@ class TestFlashAttentionKernel:
 
     @staticmethod
     def _ref(q, k, v, causal, window, cap):
-        from repro.models.attention import chunked_attention, _grouped
+        from repro.models.attention import _grouped, chunked_attention
 
         b, sq, h, dh = q.shape
         kvh = k.shape[2]

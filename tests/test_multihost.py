@@ -1,0 +1,148 @@
+"""Multi-host mesh scaffold: single-process fallback semantics in-process
+and the CPU two-subprocess ``jax.distributed`` smoke test.
+
+The subprocess test is the CI guard for ROADMAP follow-on (a): two host
+processes bring up one ``jax.distributed`` runtime, agree on the global
+device topology, build the same multi-host site mesh, exchange data with
+a real cross-process collective (gloo CPU backend), and run a SiteJob
+DAG through ``Engine(backend="multihost")`` with identical results on
+every process.
+"""
+
+import json
+import socket
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.runtime.backends import MultiHostBackend
+from repro.workflow.dag import DAG
+from repro.workflow.engine import Engine
+from repro.workflow.overhead import GridModel
+
+SRC = str(Path(__file__).resolve().parent.parent / "src")
+
+
+class TestSingleProcessFallback:
+    """Without a coordinator the backend must degrade to inline
+    execution over the local devices — safe everywhere."""
+
+    def test_describe_single_process(self):
+        be = MultiHostBackend()
+        info = be.describe()
+        assert info["is_multiprocess"] is False
+        assert info["process_count"] == 1
+        assert info["n_global_devices"] >= 1
+        assert info["mesh_shape"] == {"sites": info["n_global_devices"]}
+
+    def test_allgather_check_identity(self):
+        be = MultiHostBackend()
+        out = be.allgather_check(7.0)
+        assert out.shape == (1, 1) and float(out[0, 0]) == 7.0
+
+    def test_engine_runs_with_multihost_backend(self):
+        dag = DAG("d")
+        dag.job("a", lambda: 2)
+        dag.job("b", lambda a: a + 3, deps=["a"])
+        results = {}
+        rep = Engine(model=GridModel(prep_latency_s=0.0), backend="multihost").run(
+            dag, results=results
+        )
+        assert results["b"] == 5
+        assert rep.backend == "multihost"
+
+
+CHILD = textwrap.dedent(
+    """
+    import json, sys
+    sys.path.insert(0, {src!r})
+    import os
+    os.environ["JAX_PLATFORMS"] = "cpu"
+    import jax
+    from repro.launch.mesh import init_multihost, make_multihost_mesh
+    from repro.runtime.backends import MultiHostBackend
+    from repro.workflow.dag import DAG
+    from repro.workflow.engine import Engine
+    from repro.workflow.overhead import GridModel
+
+    pid = int(sys.argv[1])
+    be = MultiHostBackend(
+        coordinator_address="127.0.0.1:{port}", num_processes=2, process_id=pid
+    )
+    info = be.describe()
+    gathered = be.allgather_check(float(pid + 1)).reshape(-1).tolist()
+
+    dag = DAG("smoke")
+    dag.job("a", lambda: 20)
+    dag.job("b", lambda a: a + 22, deps=["a"])
+    results = {{}}
+    rep = Engine(model=GridModel(prep_latency_s=0.0), backend="multihost").run(
+        dag, results=results
+    )
+    print("MULTIHOST " + json.dumps({{
+        "pid": pid,
+        "process_count": info["process_count"],
+        "n_global_devices": info["n_global_devices"],
+        "n_local_devices": info["n_local_devices"],
+        "mesh_shape": info["mesh_shape"],
+        "is_multiprocess": info["is_multiprocess"],
+        "gathered": gathered,
+        "result": results["b"],
+        "backend": rep.backend,
+    }}), flush=True)
+    """
+)
+
+
+def _free_port() -> int:
+    with socket.socket() as s:
+        s.bind(("127.0.0.1", 0))
+        return s.getsockname()[1]
+
+
+def test_two_process_cpu_smoke(tmp_path):
+    """Two host processes, one distributed runtime: global topology,
+    cross-process all_gather, and identical multihost-backend DAG
+    results on both processes."""
+    port = _free_port()
+    script = tmp_path / "child.py"
+    script.write_text(CHILD.format(src=SRC, port=port))
+    procs = [
+        subprocess.Popen(
+            [sys.executable, str(script), str(pid)],
+            stdout=subprocess.PIPE,
+            stderr=subprocess.PIPE,
+            text=True,
+        )
+        for pid in range(2)
+    ]
+    outs = []
+    for p in procs:
+        try:
+            out, err = p.communicate(timeout=180)
+        except subprocess.TimeoutExpired:
+            for q in procs:
+                q.kill()
+            pytest.fail("multihost smoke subprocess timed out")
+        assert p.returncode == 0, f"child failed:\nstdout:\n{out}\nstderr:\n{err}"
+        outs.append(out)
+    infos = []
+    for out in outs:
+        lines = [ln for ln in out.splitlines() if ln.startswith("MULTIHOST ")]
+        assert lines, f"no smoke marker in child output: {out!r}"
+        infos.append(json.loads(lines[0][len("MULTIHOST "):]))
+    infos.sort(key=lambda d: d["pid"])
+    for info in infos:
+        assert info["is_multiprocess"] is True
+        assert info["process_count"] == 2
+        assert info["n_global_devices"] == 2
+        assert info["n_local_devices"] == 1
+        assert info["mesh_shape"] == {"sites": 2}
+        # the cross-process collective really crossed processes
+        assert info["gathered"] == [1.0, 2.0]
+        # SPMD-redundant execution: identical results on every process
+        assert info["result"] == 42
+        assert info["backend"] == "multihost"

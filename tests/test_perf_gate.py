@@ -26,8 +26,9 @@ def payload():
     acell = dict(cell, schedule="async", wall_s=307.0, submit_s=30.0)
     gcell = dict(acell, placement="greedy_eta", links="skewed", wall_s=306.0)
     fcell = dict(acell, links="skewed", wall_s=309.0)
+    bcell = dict(cell, exec_backend="batched", wall_s=324.0)
     return {
-        "cells": [cell, acell, gcell, fcell],
+        "cells": [cell, acell, gcell, fcell, bcell],
         "comparisons": [
             {
                 "app": "gfm",
@@ -37,6 +38,28 @@ def payload():
                 "wall_staged_s": 325.0,
                 "wall_async_s": 307.0,
             }
+        ],
+        "backend_comparisons": [
+            {
+                "app": "gfm",
+                "n_sites": 8,
+                "links": "grid5000",
+                "schedule": "staged",
+                "compute_scale": 50,
+                "wall_inline_s": 330.0,
+                "wall_batched_s": 326.0,
+            },
+            {
+                # small fan-out: fusion gains are noise-level, not gated —
+                # meaningful only because this row is far beyond the band
+                "app": "gfm",
+                "n_sites": 2,
+                "links": "grid5000",
+                "schedule": "staged",
+                "compute_scale": 50,
+                "wall_inline_s": 300.0,
+                "wall_batched_s": 400.0,
+            },
         ],
         "placement_comparisons": [
             {
@@ -161,6 +184,35 @@ class TestCompare:
         cand["placement_comparisons"] = []
         failures, _ = compare(payload(), cand)
         assert any("placement comparison row missing" in f for f in failures)
+
+    def test_backend_invariant_violation_fails(self):
+        cand = payload()
+        cand["backend_comparisons"][0]["wall_batched_s"] = 350.0  # 8-site row, >5% band
+        failures, _ = compare(payload(), cand)
+        assert any("backend invariant" in f for f in failures)
+
+    def test_backend_invariant_not_gated_under_8_sites(self):
+        """Only fan-out-heavy rows gate: the 2-site row has batched
+        losing by far more than the band and must not fail."""
+        failures, notes = compare(payload(), payload())
+        assert failures == [] and notes == []
+
+    def test_missing_backend_comparisons_fail(self):
+        cand = payload()
+        cand["backend_comparisons"] = []
+        failures, _ = compare(payload(), cand)
+        assert any("backend comparison row missing" in f for f in failures)
+
+    def test_legacy_baseline_cells_match_inline_backend(self):
+        """Pre-backend baselines carry no exec_backend field; their
+        cells must keep gating the candidate's inline cells."""
+        base = payload()
+        base["cells"] = base["cells"][:-1]  # drop the batched cell
+        for cell in base["cells"]:
+            cell.pop("exec_backend", None)
+        base["backend_comparisons"] = []
+        failures, notes = compare(base, payload())
+        assert failures == [] and notes == []
 
     def test_overhead_pct_not_gated_at_scaled_cells(self):
         """Compute-scale multipliers amplify calibration noise in

@@ -163,8 +163,8 @@ class TestMoELocalDispatch:
         import dataclasses
 
         import repro.configs as C
-        from repro.models.config import reduced
         from repro.models import transformer as T
+        from repro.models.config import reduced
 
         base = reduced(C.get("deepseek-moe-16b"))
         loose = dataclasses.replace(base.moe, capacity_factor=float(base.moe.n_experts))

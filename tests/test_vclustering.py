@@ -1,8 +1,8 @@
 """Algorithm 1 (variance-based distributed clustering) behaviour tests."""
 
+import os
 import subprocess
 import sys
-import os
 
 import jax
 import jax.numpy as jnp
