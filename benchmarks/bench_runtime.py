@@ -178,9 +178,12 @@ def main() -> None:
     )
     ap.add_argument(
         "--backend",
-        choices=["inline", "batched"],
+        choices=["inline", "batched", "multihost"],
         default="inline",
-        help="execution backend: per-job host loop or fused vmapped fan-outs",
+        help="execution backend: per-job host loop, fused vmapped fan-outs, "
+        "or the jax.distributed site-ownership backend (single-process "
+        "fallback unless launched under a coordinator; under one, each "
+        "process executes only its owned sites and ships results)",
     )
     args = ap.parse_args()
     run(

@@ -166,7 +166,10 @@ def fdm_site_jobs(
     ``decide_l`` (global synchronization, one ledgered round).  All k
     levels are laid out statically; levels past exhaustion no-op.  The
     terminal ``collect`` job's result is an ``FDMResult`` equal to
-    ``fdm_mine``'s.  Shares one CommLog — run without fault injection.
+    ``fdm_mine``'s.  The per-site jobs are closure-pure (ledger flags and
+    timings travel in their results; only the sync jobs touch the shared
+    CommLog), so the DAG partitions cleanly over multihost site ownership.
+    Run without fault injection (a retried sync job would ledger twice).
     Safe under both engine schedulers: each level's ledger mutations are
     ordered by the dependency chain (count -> announce -> remote ->
     decide), which ``schedule="async"`` preserves.
@@ -185,8 +188,15 @@ def fdm_site_jobs(
     l_min = [int(np.ceil(minsup * db.n_tx)) for db in sites]
     comm = CommLog()
     per_level: list[int] = []
-    acc = {"remote": 0.0, "total": 0.0}
     jobs: list[SiteJob] = []
+
+    # The per-site jobs (count_l_i, remote_l_i) are CLOSURE-PURE: their
+    # CommLog contribution ("counted" device-invocation flags) and their
+    # measured counting time ("t") travel IN their results, and the sync
+    # jobs (decide_l, collect) — which always co-locate with the shared
+    # ledger under the multihost backend's site ownership — fold them into
+    # ``comm`` and the FDMResult timings.  A closure mutation inside a
+    # per-site job would be stranded on its owning process.
 
     def count_fn(level, i):
         db = sites[i]
@@ -199,12 +209,12 @@ def fdm_site_jobs(
             cands = site_candidates(level, db, prev_global, prev_local_i)
             t0 = time.perf_counter()
             sup = item_supports(db) if level == 1 else count_supports(db, cands, backend=backend)
-            acc["total"] += time.perf_counter() - t0
-            if level == 1 or cands:
-                comm.count_calls += 1  # only real device invocations, as fdm_mine ledgers
+            dt = time.perf_counter() - t0
+            # counted: a real device invocation, as fdm_mine ledgers it
+            counted = level == 1 or bool(cands)
             cnt = {its: int(c) for its, c in zip(cands, np.asarray(sup))}
             ann = {its for its in cands if cnt[its] >= l_min[i]}
-            return {"cnt": cnt, "ann": ann}
+            return {"cnt": cnt, "ann": ann, "t": dt, "counted": counted}
 
         return fn
 
@@ -229,14 +239,19 @@ def fdm_site_jobs(
                 sups = [item_supports(sites[i]) for i in bargs]
             else:
                 sups = fused_count_sites([sites[i] for i in bargs], cands_by, backend=backend)
-            acc["total"] += time.perf_counter() - t0
+            share = (time.perf_counter() - t0) / max(len(bargs), 1)
             outs = []
             for j, i in enumerate(bargs):
                 cands = cands_by[j]
-                if level == 1 or cands:
-                    comm.count_calls += 1  # the protocol's logical per-site count
                 cnt = {its: int(c) for its, c in zip(cands, np.asarray(sups[j]))}
-                outs.append({"cnt": cnt, "ann": {its for its in cands if cnt[its] >= l_min[i]}})
+                outs.append(
+                    {
+                        "cnt": cnt,
+                        "ann": {its for its in cands if cnt[its] >= l_min[i]},
+                        "t": share,
+                        "counted": level == 1 or bool(cands),
+                    }
+                )
             return outs
 
         return fused
@@ -269,16 +284,22 @@ def fdm_site_jobs(
             if cout is None or ann is None:
                 return None
             remote = [its for its in ann["announced"] if its not in cout["cnt"]]
+            dt = 0.0
             if remote:
                 t0 = time.perf_counter()
                 sup = count_supports(db, remote, backend=backend)
                 dt = time.perf_counter() - t0
-                acc["remote"] += dt
-                acc["total"] += dt
-                comm.count_calls += 1
                 for its, c in zip(remote, np.asarray(sup)):
                     cout["cnt"][its] = int(c)
-            return {"cnt": cout["cnt"], "n_remote": len(remote)}
+            # carry this site's count-phase ledger entries forward — the
+            # downstream decide job folds them into the shared CommLog
+            return {
+                "cnt": cout["cnt"],
+                "n_remote": len(remote),
+                "count_t": cout["t"],
+                "count_counted": cout["counted"],
+                "remote_t": dt,
+            }
 
         return fn
 
@@ -293,17 +314,22 @@ def fdm_site_jobs(
             ]
             t0 = time.perf_counter()
             sups = fused_count_sites([sites[i] for i in bargs], remote_by, backend=backend)
-            dt = time.perf_counter() - t0
-            if any(remote_by):
-                acc["remote"] += dt
-                acc["total"] += dt
+            dt = time.perf_counter() - t0 if any(remote_by) else 0.0
+            share = dt / max(sum(1 for r in remote_by if r), 1)
             outs = []
             for (cout, _ann), remote, sup in zip(argss, remote_by, sups):
                 if remote:
-                    comm.count_calls += 1
                     for its, c in zip(remote, np.asarray(sup)):
                         cout["cnt"][its] = int(c)
-                outs.append({"cnt": cout["cnt"], "n_remote": len(remote)})
+                outs.append(
+                    {
+                        "cnt": cout["cnt"],
+                        "n_remote": len(remote),
+                        "count_t": cout["t"],
+                        "count_counted": cout["counted"],
+                        "remote_t": share if remote else 0.0,
+                    }
+                )
             return outs
 
         return fused
@@ -313,7 +339,12 @@ def fdm_site_jobs(
             if ann is None:
                 return None
             # ann non-None implies every count (and hence remote) is live,
-            # so remotes[i] is site i's counts — positional, no filtering
+            # so remotes[i] is site i's counts — positional, no filtering.
+            # The per-site device-invocation flags shipped with the remote
+            # results are ledgered HERE (one +1 per real count call, as
+            # fdm_mine counts them): counts first, then remote serves.
+            comm.count_calls += sum(1 for r in remotes if r["count_counted"])
+            comm.count_calls += sum(1 for r in remotes if r["n_remote"])
             comm.add_round(
                 ann["payload"] + sum(r["n_remote"] for r in remotes), _itemset_bytes(level), s
             )
@@ -327,7 +358,13 @@ def fdm_site_jobs(
                 {its for its in prev_global if remotes[i]["cnt"].get(its, 0) >= l_min[i]}
                 for i in range(s)
             ]
-            return {"global": prev_global, "local": prev_local, "frequent": dict(glob)}
+            return {
+                "global": prev_global,
+                "local": prev_local,
+                "frequent": dict(glob),
+                "count_t": sum(r["count_t"] for r in remotes),
+                "remote_t": sum(r["remote_t"] for r in remotes),
+            }
 
         return fn
 
@@ -376,14 +413,18 @@ def fdm_site_jobs(
 
     def collect_fn(*decisions):
         frequent: dict[Itemset, int] = {}
+        remote_t = 0.0
+        total_t = 0.0
         for dec in decisions:
             if dec is not None:
                 frequent.update(dec["frequent"])
+                remote_t += dec["remote_t"]
+                total_t += dec["count_t"] + dec["remote_t"]
         return FDMResult(
             frequent=frequent,
             comm=comm,
-            remote_count_time=acc["remote"],
-            total_count_time=acc["total"],
+            remote_count_time=remote_t,
+            total_count_time=total_t,
             per_level_candidates=per_level,
         )
 

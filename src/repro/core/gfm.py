@@ -307,13 +307,18 @@ def gfm_site_jobs(
         )
     )
 
+    # The per-site recount jobs are CLOSURE-PURE: everything they know
+    # flows in through their dependency results and out through their own
+    # result.  Their device-count-call contribution to the shared CommLog
+    # is ledgered by the downstream sync job (``decide``) from the shipped
+    # ``n_missing`` values — under the multihost backend each recount runs
+    # on its owning process only, so a closure mutation here would be lost
+    # to the process that aggregates the ledger.
     def recount_fn(i):
         db = sites[i]
 
         def fn(lm, pool):
             n_missing = fill_missing(db, lm, pool, backend=backend)
-            if n_missing:
-                comm.count_calls += 1
             return lm, n_missing
 
         return fn
@@ -330,7 +335,6 @@ def gfm_site_jobs(
             if missing:
                 for its, c in zip(missing, sup):
                     lm.counts[its] = int(c)
-                comm.count_calls += 1
             outs.append((lm, len(missing)))
         return outs
 
@@ -349,6 +353,10 @@ def gfm_site_jobs(
 
     def decide_fn(pool, *recounts):
         local = [lm for lm, _ in recounts]
+        # each site that actually had missing pool entries made one device
+        # count call during its recount — ledgered HERE, from the shipped
+        # results, exactly as gfm_mine counts it
+        comm.count_calls += sum(1 for _, nm in recounts if nm)
         comm.add_round(sum(nm for _, nm in recounts), _itemset_bytes(k), s)
         counts = aggregate_counts(pool, local)
         decided = {its: (c, c >= g_min) for its, c in counts.items()}

@@ -1,47 +1,83 @@
-"""Multi-host execution backend — the ``jax.distributed`` mesh scaffold.
+"""Multi-host execution backend — true per-process site ownership over a
+``jax.distributed`` mesh.
 
-ROADMAP follow-on (a): swap the single-process site mesh for a
-multi-process one so the same SiteJob DAGs distribute for real.  This
-module is the scaffold for that swap: :class:`MultiHostBackend` brings
-up the distributed runtime (``launch.mesh.init_multihost``), builds the
-global device mesh spanning every host (``make_multihost_mesh``), and
-executes the workflow SPMD-redundantly — every process runs the same DAG
-over the same inputs, which is the paper's "logical merge" redundancy
-applied to the whole workflow: deterministic job callables make every
-process's results identical without any cross-process result shipping,
-while mesh collectives (all_gather under shard_map) already span hosts.
+ROADMAP follow-on (a), completed: the same SiteJob DAGs the single-host
+runtime executes now distribute for real.  :class:`MultiHostBackend`
+brings up the distributed runtime (``launch.mesh.init_multihost``),
+builds the global device mesh spanning every host
+(``make_multihost_mesh``), derives an explicit ``site -> process``
+ownership map from it (``launch.mesh.site_ownership``: capacity-
+proportional over the mesh's processes; per-site load weights are the
+seam for heterogeneous slots — the scalar ``GridModel.workers_per_site``
+is uniform and therefore balance-neutral), and then:
 
-What this scaffold gives the next PR:
-  * process bring-up + global mesh construction behind one object;
-  * a CPU two-subprocess smoke path (gloo collectives) exercised in CI,
-    so the multi-process plumbing cannot rot;
-  * the ``ExecutionBackend.call`` seam where per-site jobs will be
-    routed to their owning process (site % process_count) once results
-    ship via ``process_allgather`` instead of running redundantly.
+  * each process executes ONLY the jobs of its owned sites — a 3-process
+    run really does run each site's mining on exactly one process
+    (``executed_log`` is the audit trail the conformance harness checks);
+  * each executed job's result — wrapped in an owner-measured
+    ``TimedResult`` — ships to every process through one
+    ``allgather_bytes`` shipment (two ``process_allgather`` rounds:
+    lengths, then padded payloads; ``compat.pack_payload`` converts
+    jax-array pytree leaves to host numpy and pickles non-array outputs
+    such as itemset dicts);
+  * every process keeps scheduling the WHOLE DAG — placement, the
+    simulated clock and the ledger are globally consistent because every
+    process sees the same owner-measured times, so both engine schedulers
+    replay the identical event order everywhere and the per-job shipments
+    are the only collectives (the paper's synchronization traffic and
+    nothing else).
 
 Single-process fallback: without a coordinator the backend degrades to
 inline execution over the local devices — same results, no distributed
 state touched — so ``Engine(backend="multihost")`` is safe everywhere.
+
+Determinism contract (why the shipments line up): both schedulers order
+events only by (dag, model, placement seed, fault seed, measured times),
+and the measured times are owner-authoritative everywhere, so every
+process invokes ``call`` for the same jobs in the same order.  Keep
+per-process state OUT of the scheduling inputs — e.g. a ``rescue_path``
+resuming on one process only would desynchronize the collectives.
 """
 
 from __future__ import annotations
 
+import time
 from typing import Any
 
 import jax
 import numpy as np
 
-from repro.launch.mesh import init_multihost, make_multihost_mesh
-from repro.workflow.dag import Job
-from repro.workflow.executor import ExecutionBackend
+from repro.compat import pack_payload, unpack_payload
+from repro.launch.mesh import (
+    allgather_bytes,
+    init_multihost,
+    make_multihost_mesh,
+    site_ownership,
+)
+from repro.workflow.dag import DAG, Job, TimedResult
+from repro.workflow.executor import ExecutionBackend, Partition
+
+
+class _ShippedError:
+    """Wire marker for an exception raised by an owned job's callable:
+    the owner ships it instead of the result so every process raises the
+    same failure AFTER the collective (raising before it would strand
+    the peers inside ``process_allgather``, which has no timeout)."""
+
+    def __init__(self, message: str):
+        self.message = message
 
 
 class MultiHostBackend(ExecutionBackend):
-    """SPMD-redundant DAG execution over a ``jax.distributed`` mesh.
+    """Site-partitioned DAG execution over a ``jax.distributed`` mesh.
 
     Parameters mirror ``jax.distributed.initialize``; all-None (the
     default) means "join an already-initialized runtime, or run
     single-process" — the backend never guesses a coordinator.
+
+    ``partition_sites=False`` restores the pre-ownership SPMD-redundant
+    mode (every process executes every job; no shipping) — kept for A/B
+    measurements of shipping vs redundancy.
     """
 
     name = "multihost"
@@ -52,14 +88,37 @@ class MultiHostBackend(ExecutionBackend):
         num_processes: int | None = None,
         process_id: int | None = None,
         axis: str = "sites",
+        partition_sites: bool = True,
     ):
         self.coordinator_address = coordinator_address
         self.num_processes = num_processes
         self.process_id = process_id
         self.axis = axis
+        self.partition_sites = partition_sites
         self._ready = False
         self.is_multiprocess = False
         self.mesh = None
+        self._partition: Partition | None = None
+        # audit trails for the conformance harness: which jobs' callables
+        # ran in THIS process, and which arrived as shipped results
+        self.executed_log: list[str] = []
+        self.shipped_log: list[str] = []
+        if coordinator_address is not None or num_processes is not None:
+            # explicit coordinator args = the caller WANTS a distributed
+            # runtime, and jax.distributed.initialize must beat the
+            # process's first XLA backend query (jax.process_count,
+            # jax.random.PRNGKey, ...) — so bring it up eagerly at
+            # construction, before anything else can touch jax.  All-None
+            # construction stays lazy (safe everywhere).
+            self._ensure()
+
+    def ensure_initialized(self) -> None:
+        """Public bring-up (idempotent): ``jax.distributed`` init + the
+        global mesh.  MUST run before any jax backend query
+        (``jax.process_count``, ``jax.devices``, any computation) in this
+        process — callers that need topology facts ahead of ``Engine.run``
+        (e.g. ``GridRuntime``'s sync-mode selection) call this first."""
+        self._ensure()
 
     def _ensure(self) -> None:
         """Bring up the distributed runtime and the global mesh once."""
@@ -74,8 +133,8 @@ class MultiHostBackend(ExecutionBackend):
         self._ready = True
 
     def describe(self) -> dict:
-        """Scaffold introspection (the smoke test's assertions): process
-        topology and the global mesh this backend executes over."""
+        """Topology introspection (the smoke test's assertions): process
+        layout and the global mesh this backend executes over."""
         self._ensure()
         return {
             "is_multiprocess": self.is_multiprocess,
@@ -89,8 +148,8 @@ class MultiHostBackend(ExecutionBackend):
 
     def allgather_check(self, value: float) -> np.ndarray:
         """Cross-process collective smoke: gather one scalar per process
-        (identity on a single process).  This is the wire the next PR
-        ships per-site results over."""
+        (identity on a single process) — the same wire ``call`` ships
+        per-site results over."""
         self._ensure()
         arr = np.asarray([value], dtype=np.float32)
         if not self.is_multiprocess:
@@ -99,12 +158,90 @@ class MultiHostBackend(ExecutionBackend):
 
         return np.asarray(process_allgather(arr))
 
-    def begin_run(self, dag, results) -> None:
+    # -- ownership ----------------------------------------------------------
+
+    def begin_run(self, dag: DAG, results: dict) -> None:
         self._ensure()
+        self._partition = None
+        self.executed_log.clear()
+        self.shipped_log.clear()
+
+    def partition(self, dag: DAG, model=None) -> Partition | None:
+        """Derive the ``site -> process`` ownership map for this DAG from
+        the global mesh (every process computes the identical map) and
+        project it onto job names.  Single-process runtimes — and
+        ``partition_sites=False`` — return None: everything runs locally.
+        """
+        self._ensure()
+        if not self.is_multiprocess or not self.partition_sites:
+            return None
+        sites = sorted({j.site for j in dag.jobs.values()})
+        # capacity-proportional over the mesh's processes; the grid
+        # model's workers_per_site is a UNIFORM per-site weight, which
+        # cancels out of the balance — per-site heterogeneous weights are
+        # site_ownership's seam when the model grows them
+        owner_by_site = site_ownership(sites, n_processes=jax.process_count(), mesh=self.mesh)
+        me = jax.process_index()
+        owner_of = {j.name: owner_by_site[j.site] for j in dag.jobs.values()}
+        self._partition = Partition(
+            owned=frozenset(n for n, p in owner_of.items() if p == me),
+            owner_of=owner_of,
+            n_processes=jax.process_count(),
+            process_index=me,
+            owned_sites=tuple(s for s, p in sorted(owner_by_site.items()) if p == me),
+        )
+        return self._partition
+
+    # -- execution ----------------------------------------------------------
 
     def call(self, job: Job, args: list) -> Any:
-        # SPMD-redundant: every process executes every job over the
-        # global mesh.  Deterministic callables => identical results on
-        # every process (the paper's logical-merge property), so no
-        # cross-process result staging is needed yet.
-        return job.fn(*args)
+        part = self._partition
+        if part is None:
+            # single process (or partitioning disabled): plain inline
+            # execution — same results, no distributed state touched
+            self.executed_log.append(job.name)
+            return job.fn(*args)
+        if job.name in part.owned:
+            # owner: execute for real, normalize to an owner-measured
+            # TimedResult (untimed callables get the host bracket HERE, on
+            # the one process that ran them), and ship it.  A raised
+            # exception ships too — the peers are already committed to
+            # joining this job's collective, so propagating it before the
+            # shipment would leave them deadlocked in process_allgather;
+            # instead everyone receives it and fails the run together.
+            t0 = time.perf_counter()
+            try:
+                raw = job.fn(*args)
+                if not isinstance(raw, TimedResult):
+                    raw = TimedResult(raw, time.perf_counter() - t0)
+                payload = pack_payload(raw)
+                # logged only once the result is actually shippable, so
+                # the audit trail never claims an execution whose peers
+                # received a serialization failure instead
+                self.executed_log.append(job.name)
+            except Exception as e:  # noqa: BLE001 - shipped, not swallowed
+                payload = pack_payload(_ShippedError(f"{type(e).__name__}: {e}"))
+        else:
+            payload = b""
+        # one shipment per executed job (allgather_bytes = two
+        # process_allgather rounds: lengths, then padded payloads); every
+        # process joins — the schedulers' deterministic event order
+        # guarantees they arrive in lockstep — and the owner's slot
+        # carries the result
+        shipped = allgather_bytes(payload)
+        out = unpack_payload(shipped[part.owner_of[job.name]])
+        if isinstance(out, _ShippedError):
+            raise RuntimeError(
+                f"job {job.name!r} failed on its owning process "
+                f"{part.owner_of[job.name]}: {out.message}"
+            )
+        if not isinstance(out, TimedResult):  # pragma: no cover - wire guard
+            raise RuntimeError(
+                f"shipped result for job {job.name!r} from process "
+                f"{part.owner_of[job.name]} is not an owner-measured TimedResult"
+            )
+        if job.name not in part.owned:
+            self.shipped_log.append(job.name)
+        # every process — owner included — adopts the round-tripped value,
+        # so the results dict is bit-identical everywhere
+        return out

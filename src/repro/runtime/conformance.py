@@ -1,0 +1,252 @@
+"""Cross-backend conformance harness — the contract every execution
+backend must satisfy, and the multi-process audit trail that proves true
+site ownership.
+
+The contract: execution backends change HOW job callables run (inline
+host loop, fused vmapped dispatch, site-partitioned multi-host with
+result shipping) — never WHAT the scheduler decides or WHAT the mining
+computes.  For any (app, schedule) cell this module can produce
+
+  * a **result digest** — the mining outputs themselves (cluster labels,
+    frequent itemsets with exact counts, the CommLog) in canonical
+    JSON-able form; backends must match BIT-FOR-BIT;
+  * a **scheduling fingerprint** — the simulated-clock quantities that
+    are deterministic under fixed placement (prep/submit/transfer,
+    placements, retries, job set); backends must match exactly.
+
+Run as a module it is the multi-host conformance CHILD: each
+``jax.distributed`` process executes every cell through
+``MultiHostBackend`` *and* through the inline backend in the same
+process, then prints one JSON report (digests, fingerprints, per-process
+execution logs, ownership) for the parent harness — pytest
+(``tests/test_backend_conformance.py``) or the CI matrix job — to cross
+check:
+
+    python -m repro.runtime.conformance --pid 0 --nprocs 3 \\
+        --port 12345 --sites 4
+
+The execution logs are the acceptance check for true distribution: each
+site's jobs must appear in EXACTLY ONE process's ``executed`` list.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import numpy as np
+
+from repro.core.apriori import TransactionDB
+from repro.core.vclustering import VClusterConfig
+from repro.data.synthetic import (
+    gaussian_mixture,
+    ibm_transactions,
+    split_sites,
+    split_transactions,
+)
+from repro.runtime.gridruntime import GridRuntime
+from repro.workflow.engine import Engine, RunReport
+from repro.workflow.faults import FaultInjector
+from repro.workflow.overhead import GridModel
+
+APPS = ("vclustering", "gfm", "fdm")
+SCHEDULES = ("staged", "async")
+
+# small-but-nontrivial canonical inputs: enough structure that the mining
+# produces real itemsets/clusters, small enough that a 3-process CPU
+# conformance run stays in CI smoke budget
+_N_POINTS_PER_SITE = 60
+_N_TX = 160
+_N_ITEMS = 12
+_K_ITEMSETS = 3
+_MINSUP = 0.15
+
+
+def make_inputs(n_sites: int, seed: int = 0):
+    """Deterministic synthetic inputs for one conformance cell: per-site
+    point sets for clustering and per-site TransactionDBs for mining.
+    Every process derives the identical inputs from the seed."""
+    pts, _ = gaussian_mixture(seed, _N_POINTS_PER_SITE * n_sites, 2, 3, spread=9.0, sigma=0.8)
+    xs = split_sites(pts, n_sites, seed=seed + 1)
+    dense = ibm_transactions(
+        seed=seed + 2, n_tx=_N_TX, n_items=_N_ITEMS, avg_tx_len=5, n_patterns=4
+    )
+    dbs = [TransactionDB.from_dense(d) for d in split_transactions(dense, n_sites, seed=seed)]
+    return xs, dbs
+
+
+def _cfg() -> VClusterConfig:
+    return VClusterConfig(k_local=3, kmeans_iters=5, use_kernel=False)
+
+
+def run_app(app: str, n_sites: int, schedule: str, backend, *, faults=None, seed: int = 0):
+    """Execute one app through GridRuntime on the given execution backend
+    (name or instance); returns the RuntimeRun."""
+    xs, dbs = make_inputs(n_sites, seed)
+    engine = Engine(
+        model=GridModel(),
+        faults=faults,
+        overlap_prep=True,
+        schedule=schedule,
+        backend=backend,
+    )
+    rt = GridRuntime(engine=engine, sync="pooled", use_kernel=False, count_backend="jnp")
+    if app == "vclustering":
+        return rt.run_vclustering(jax.random.PRNGKey(seed), xs, _cfg())
+    if app == "gfm":
+        return rt.run_gfm(dbs, _K_ITEMSETS, _MINSUP)
+    if app == "fdm":
+        return rt.run_fdm(dbs, _K_ITEMSETS, _MINSUP)
+    raise ValueError(f"unknown app {app!r}; expected one of {APPS}")
+
+
+def _comm_digest(comm) -> dict:
+    return {
+        "rounds": int(comm.rounds),
+        "bytes_sent": int(comm.bytes_sent),
+        "messages": int(comm.messages),
+        "count_calls": int(comm.count_calls),
+        "per_round_bytes": [int(b) for b in comm.per_round_bytes],
+    }
+
+
+def result_digest(app: str, run) -> dict:
+    """The mining output in canonical JSON-able form — the thing that must
+    be bit-for-bit identical across backends and processes."""
+    r = run.result
+    if app == "vclustering":
+        return {
+            "labels": np.asarray(r.labels).astype(int).tolist(),
+            "n_global": int(r.merged.n_global),
+            "n_merges": int(r.merged.n_merges),
+            "comm_bytes": int(r.comm_bytes),
+        }
+    freq = {",".join(map(str, its)): int(c) for its, c in sorted(r.frequent.items())}
+    out = {"frequent": freq, "comm": _comm_digest(r.comm)}
+    if app == "gfm":
+        out["pool_sizes"] = [int(p) for p in r.pool_sizes]
+        out["n_total_tx"] = int(r.n_total_tx)
+    else:
+        out["per_level_candidates"] = [int(c) for c in r.per_level_candidates]
+    return out
+
+
+def schedule_fingerprint(rep: RunReport) -> dict:
+    """What the scheduler decided, independent of measured compute and of
+    the executing backend: identical across backends under fixed
+    placement, and identical across the processes of one multi-host run
+    (the globally-consistent clock/ledger invariant)."""
+    return {
+        "schedule": rep.schedule,
+        "placement": rep.placement,
+        "placements": {k: int(v) for k, v in sorted(rep.placements.items())},
+        "prep_s": rep.prep_s,
+        "submit_s": rep.submit_s,
+        "transfer_s": rep.transfer_s,
+        "retries": int(rep.retries),
+        "speculative": int(rep.speculative),
+        "jobs": sorted(rep.job_times),
+    }
+
+
+def conformance_cell(app: str, n_sites: int, schedule: str, backend) -> dict:
+    """One (app, schedule) cell on one backend: digest + fingerprint."""
+    run = run_app(app, n_sites, schedule, backend)
+    return {
+        "app": app,
+        "schedule": schedule,
+        "backend": run.backend,
+        "digest": result_digest(app, run),
+        "fingerprint": schedule_fingerprint(run.report),
+    }
+
+
+def job_sites(app: str, n_sites: int) -> dict[str, int]:
+    """job name -> pre-assigned site for one app's DAG (the ownership
+    audit needs it to check each SITE's jobs land on one process)."""
+    from repro.core.fdm import fdm_site_jobs
+    from repro.core.gfm import gfm_site_jobs
+    from repro.core.vclustering import vcluster_site_jobs
+
+    xs, dbs = make_inputs(n_sites)
+    if app == "vclustering":
+        jobs = vcluster_site_jobs(jax.random.PRNGKey(0), xs, _cfg())
+    elif app == "gfm":
+        jobs = gfm_site_jobs(dbs, _K_ITEMSETS, _MINSUP, backend="jnp")
+    else:
+        jobs = fdm_site_jobs(dbs, _K_ITEMSETS, _MINSUP, backend="jnp")
+    return {j.name: int(j.site) for j in jobs}
+
+
+# ---------------------------------------------------------------------------
+# Multi-host conformance child (one jax.distributed process)
+# ---------------------------------------------------------------------------
+
+MARKER = "MULTIHOST_CONFORMANCE "
+
+
+def child_main(argv=None) -> dict:  # pragma: no cover - runs in the
+    # jax.distributed subprocesses of the conformance harness, where
+    # in-process coverage cannot see it (tests/test_backend_conformance.py
+    # exercises every line through 2- and 3-process groups)
+    """Run every conformance cell through the multihost backend AND the
+    inline baseline in THIS process; print one JSON report."""
+    from repro.runtime.backends import MultiHostBackend
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pid", type=int, required=True)
+    ap.add_argument("--nprocs", type=int, required=True)
+    ap.add_argument("--port", type=int, required=True)
+    ap.add_argument("--sites", type=int, required=True)
+    ap.add_argument("--apps", default=",".join(APPS))
+    ap.add_argument("--schedules", default=",".join(SCHEDULES))
+    args = ap.parse_args(argv)
+
+    be = MultiHostBackend(
+        coordinator_address=f"127.0.0.1:{args.port}",
+        num_processes=args.nprocs,
+        process_id=args.pid,
+    )
+    report = {
+        "pid": args.pid,
+        "n_sites": args.sites,
+        "topology": be.describe(),
+        "cells": [],
+    }
+    for app in args.apps.split(","):
+        for schedule in args.schedules.split(","):
+            mh = conformance_cell(app, args.sites, schedule, be)
+            mh["executed"] = list(be.executed_log)
+            mh["shipped"] = sorted(be.shipped_log)
+            mh["owned_sites"] = list(
+                be._partition.owned_sites if be._partition is not None else []
+            )
+            mh["job_sites"] = job_sites(app, args.sites)
+            inline = conformance_cell(app, args.sites, schedule, "inline")
+            report["cells"].append({"multihost": mh, "inline": inline})
+
+    # fault-injection under true distribution: a seeded injected failure
+    # retries identically on every process, the shipment collectives stay
+    # in lockstep, and the result still matches the inline run under the
+    # same faults
+    fault = {"cluster_1": 1}
+    run_mh = run_app("vclustering", args.sites, "staged", be, faults=FaultInjector(fail=fault))
+    run_in = run_app(
+        "vclustering", args.sites, "staged", "inline", faults=FaultInjector(fail=fault)
+    )
+    report["fault_cell"] = {
+        "retries_mh": int(run_mh.report.retries),
+        "retries_inline": int(run_in.report.retries),
+        "digest_mh": result_digest("vclustering", run_mh),
+        "digest_inline": result_digest("vclustering", run_in),
+        "executed": list(be.executed_log),
+        "n_processes": int(run_mh.n_processes),
+        "owned_sites": list(run_mh.owned_sites or []),
+    }
+    print(MARKER + json.dumps(report), flush=True)
+    return report
+
+
+if __name__ == "__main__":  # pragma: no cover - subprocess entry
+    child_main()

@@ -48,7 +48,7 @@ from repro.workflow.overhead import (
     overhead_pct,
 )
 from repro.workflow.placement import resolve_placement
-from repro.workflow.sitejob import job_specs
+from repro.workflow.sitejob import job_specs, merge_owner_times
 
 
 def _backend_differs(backend: str | ExecutionBackend, engine: Engine) -> bool:
@@ -74,6 +74,11 @@ class RuntimeRun:
     schedule: str = "staged"  # which engine scheduler executed the DAG
     placement: str = "fixed"  # which matchmaking policy placed the jobs
     backend: str = "inline"  # which execution backend ran the callables
+    # multi-host ownership (multihost backend): how many jax.distributed
+    # processes cooperated, and which grid sites THIS process executed —
+    # None means the run was not partitioned (every job ran locally)
+    n_processes: int = 1
+    owned_sites: tuple | None = None
     # the analytical view of the DAG that was actually executed (deps,
     # bytes, the sites the policy actually chose, measured compute) —
     # feed to overhead.estimate_* or sitejob.replay_dag; the sweep
@@ -166,6 +171,31 @@ class GridRuntime:
 
     def _cluster_sync(self, n_sites: int, cfg: VClusterConfig):
         """Returns (sync_fn, mode) for the merge job."""
+        be = self.engine.backend
+        partitioned = getattr(be, "partition_sites", False)
+        if partitioned and hasattr(be, "ensure_initialized"):
+            # bring the distributed runtime up BEFORE any jax backend
+            # query: jax.distributed.initialize must precede the first
+            # process_count()/devices() call in this process, and this
+            # method runs ahead of Engine.run's own begin_run bring-up
+            be.ensure_initialized()
+        if partitioned and jax.process_count() > 1:
+            # A site-PARTITIONED multi-host run executes the merge job on
+            # ONE owning process, so its sync must not be a mesh-spanning
+            # collective (a shard_map over the global mesh entered from a
+            # single process would deadlock the other hosts).  The pooled
+            # merge is bit-identical — the paper's redundant logical
+            # merge — and the shipped result reaches every process.
+            # (SPMD-redundant multi-process runs — partition_sites=False —
+            # enter the collective from every process and keep shard_map.)
+            if self.sync == "shard_map":
+                raise RuntimeError(
+                    "sync='shard_map' is not supported on a site-partitioned "
+                    "multi-process runtime: the merge job executes on its "
+                    "owning process only; use sync='pooled' (bit-identical "
+                    "logical merge) or MultiHostBackend(partition_sites=False)"
+                )
+            return None, "pooled"
         mesh = self.mesh
         if self.sync != "pooled" and mesh is None:
             mesh = make_site_mesh(n_sites, self.axis)
@@ -209,6 +239,13 @@ class GridRuntime:
         The specs carry the sites the placement policy ACTUALLY chose
         (``rep.placements``), so the bounds price the executed assignment
         rather than the builders' pre-assigned sites."""
+        if rep.owned_jobs is not None:
+            # partitioned (multi-host) run: this process only measured its
+            # OWNED jobs — complete the record with the owner-measured
+            # times the engine ledgered from shipped results, so
+            # job_specs(strict=True) and the estimators see one
+            # owner-authoritative time per job on every process
+            measured = merge_owner_times(measured, rep.job_times, rep.owned_jobs)
         specs = job_specs(jobs, rep.job_times)
         if rep.placements:
             specs = [sp._replace(site=rep.placements.get(sp.name, sp.site)) for sp in specs]
@@ -221,6 +258,8 @@ class GridRuntime:
             schedule=rep.schedule,
             placement=rep.placement,
             backend=rep.backend,
+            n_processes=rep.n_processes,
+            owned_sites=rep.owned_sites,
             specs=specs,
             estimated_s=estimate_dag(specs, model),
             estimated_staged_s=estimate_stages_from_specs(specs, model),

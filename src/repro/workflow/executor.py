@@ -22,26 +22,49 @@ Backends:
     calibration stay honest: each site's job is credited what one
     site's share of the fused call cost, which is what a real grid
     site would have spent.
-  * ``multihost`` (``repro.runtime.backends.MultiHostBackend``) — a
-    ``jax.distributed`` multi-process mesh scaffold: every process
-    executes the DAG redundantly over a global device mesh (the
-    paper's "logical merge" redundancy applied to the whole workflow),
-    which is the stepping stone to truly distributing SiteJob DAGs.
+  * ``multihost`` (``repro.runtime.backends.MultiHostBackend``) — true
+    multi-host execution over a ``jax.distributed`` process mesh: grid
+    sites are partitioned over the processes (``launch.mesh.
+    site_ownership``), each process executes ONLY its owned jobs, and
+    per-job results ship to every process via ``process_allgather`` —
+    the paper's site-partitioned deployment, with result shipping as
+    the only cross-process traffic.
 
-The scheduler contract is one method: :meth:`ExecutionBackend.call`
-replaces the engine's direct ``job.fn(*args)`` invocation inside
-``Engine._attempt``.  Everything else — fault injection, retries,
-rescue files, speculation, the simulated clock — is scheduler policy
-and stays in the engine, identical across backends.
+The scheduler contract is :meth:`ExecutionBackend.call` (replacing the
+engine's direct ``job.fn(*args)`` invocation inside ``Engine._attempt``)
+plus the optional :meth:`ExecutionBackend.partition` ownership hook.
+Everything else — fault injection, retries, rescue files, speculation,
+the simulated clock — is scheduler policy and stays in the engine,
+identical across backends.
 """
 
 from __future__ import annotations
 
+from dataclasses import dataclass
 from typing import Any
 
 from repro.workflow.dag import DAG, Job, TimedResult
 
 BACKENDS = ("inline", "batched", "multihost")
+
+
+@dataclass(frozen=True)
+class Partition:
+    """How a distributed backend splits one DAG over its processes.
+
+    ``owned`` names the jobs THIS process executes; ``owner_of`` maps
+    every job to its owning process id.  The engine still schedules the
+    whole DAG locally — placement, the simulated clock and the ledger
+    are global state and must stay identical on every process — but only
+    owned jobs' callables run here; the rest arrive as owner-measured
+    shipped results through ``ExecutionBackend.call``.
+    """
+
+    owned: frozenset[str]
+    owner_of: dict[str, int]
+    n_processes: int
+    process_index: int
+    owned_sites: tuple[int, ...]
 
 
 class ExecutionBackend:
@@ -52,11 +75,22 @@ class ExecutionBackend:
     peers); ``call`` replaces the engine's direct ``job.fn(*args)``.
     Whatever ``call`` returns flows through the engine's TimedResult
     handling unchanged.
+
+    ``partition`` (called once per run, after ``begin_run``) lets a
+    distributed backend declare per-process job ownership: return a
+    :class:`Partition` and the engine will require every non-owned job's
+    ``call`` to return an owner-measured ``TimedResult`` (a host-side
+    bracket around a job that executed elsewhere would poison the
+    globally-consistent clock).  The default — every job local — returns
+    None.
     """
 
     name = "?"
 
     def begin_run(self, dag: DAG, results: dict) -> None:
+        return None
+
+    def partition(self, dag: DAG, model=None) -> Partition | None:
         return None
 
     def call(self, job: Job, args: list) -> Any:
@@ -178,6 +212,7 @@ __all__ = [
     "BatchedBackend",
     "ExecutionBackend",
     "InlineBackend",
+    "Partition",
     "TimedResult",
     "resolve_backend",
 ]

@@ -1,0 +1,246 @@
+"""Fault-injection property tests for the BATCHED and MULTIHOST
+execution backends (hypothesis, with the deterministic repro.testing
+fallback for hermetic environments).
+
+The invariant under test, across random fan-out DAGs × random injected
+fault maps × both engine schedulers: retries, rescue and speculation
+NEVER lose or duplicate a job's committed result —
+
+  * every job ends "done" with exactly the value its fn computes, and
+    its fn (or its slice of a fused dispatch) executes EXACTLY once per
+    run (an injected failure consumes a retry, never a re-execution of
+    the fused batch: the batched backend's cache is consumed exactly
+    once);
+  * a crashed run's rescue file resumes without re-executing completed
+    jobs on either backend;
+  * speculation duplicates simulated time only — the real callable still
+    runs exactly once.
+
+Inline paths were already property-tested (test_scheduler_invariants,
+test_workflow); these pin the same guarantees onto the dispatch-fusing
+and ownership/shipping backends.  The multihost cells here run the
+single-process fallback in-process (same ``call`` path, partition-free);
+the true multi-process fault cell lives in the subprocess conformance
+harness (tests/test_backend_conformance.py::test_fault_injection_under_distribution).
+"""
+
+import random
+from pathlib import Path
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # hermetic container: deterministic fallback
+    from repro.testing import given, settings, strategies as st
+
+from repro.runtime.backends import MultiHostBackend
+from repro.workflow.dag import DAG, TimedResult
+from repro.workflow.engine import SCHEDULES, Engine
+from repro.workflow.executor import BatchedBackend
+from repro.workflow.faults import FaultInjector
+from repro.workflow.overhead import GridModel
+from repro.workflow.sitejob import timed_batch
+
+N_SITES = 4
+
+
+def _model() -> GridModel:
+    return GridModel(prep_latency_s=0.0, submit_latency_s=0.0)
+
+
+def fanout_dag(n_leaves: int, counts: dict, retries: int = 3):
+    """``n_leaves`` batchable site jobs + a collector.  ``counts`` tallies
+    REAL executions per job name — fn path and fused path both count —
+    so the exactly-once property is directly observable."""
+
+    def leaf_fn(i):
+        def fn():
+            counts[f"leaf_{i}"] = counts.get(f"leaf_{i}", 0) + 1
+            return TimedResult(10 * i, 0.0)
+
+        return fn
+
+    def fused(bargs, argss):
+        for i in bargs:
+            counts[f"leaf_{i}"] = counts.get(f"leaf_{i}", 0) + 1
+        return [10 * i for i in bargs]
+
+    bf = timed_batch(fused)
+    dag = DAG("fanout")
+    for i in range(n_leaves):
+        dag.job(
+            f"leaf_{i}",
+            leaf_fn(i),
+            site=i % N_SITES,
+            retries=retries,
+            batch_key="leaf",
+            batched_fn=bf,
+            batch_arg=i,
+        )
+    def collect(*xs):
+        counts["collect"] = counts.get("collect", 0) + 1
+        return TimedResult(sum(xs), 0.0)
+
+    dag.job("collect", collect, deps=[f"leaf_{i}" for i in range(n_leaves)], retries=retries)
+    return dag
+
+
+def fault_map(seed: int, n_leaves: int) -> dict[str, int]:
+    """Random injected-failure map: up to half the jobs fail 1-2 attempts
+    (within the retry budget of 3)."""
+    rng = random.Random(seed)
+    names = [f"leaf_{i}" for i in range(n_leaves)] + ["collect"]
+    return {n: rng.randint(1, 2) for n in names if rng.random() < 0.4}
+
+
+def _backend(kind: str):
+    return BatchedBackend() if kind == "batched" else MultiHostBackend()
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=10_000),
+    n_leaves=st.integers(min_value=1, max_value=6),
+    schedule=st.sampled_from(SCHEDULES),
+    kind=st.sampled_from(["batched", "multihost"]),
+)
+def test_faults_never_lose_or_duplicate_results(seed, n_leaves, schedule, kind):
+    counts: dict[str, int] = {}
+    dag = fanout_dag(n_leaves, counts)
+    faults = fault_map(seed, n_leaves)
+    results: dict = {}
+    eng = Engine(
+        model=_model(),
+        faults=FaultInjector(fail=dict(faults)),
+        schedule=schedule,
+        backend=_backend(kind),
+    )
+    rep = eng.run(dag, results=results)
+    # no lost results: every job committed, with the correct value
+    assert results["collect"] == sum(10 * i for i in range(n_leaves))
+    for i in range(n_leaves):
+        assert results[f"leaf_{i}"] == 10 * i
+    assert all(j.status == "done" for j in dag.jobs.values())
+    # no duplicated execution: each callable ran exactly once — retries
+    # consumed the batched cache / re-attempt, never a second execution
+    assert counts == {name: 1 for name in dag.jobs}
+    # every injected failure shows up as exactly one ledgered retry
+    assert rep.retries == sum(faults.values())
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=10_000),
+    kind=st.sampled_from(["batched", "multihost"]),
+)
+def test_batched_cache_consumed_exactly_once(seed, kind):
+    """After any faulty run the batched backend's fuse cache is empty:
+    every pre-executed peer result was handed out exactly once."""
+    counts: dict[str, int] = {}
+    dag = fanout_dag(5, counts)
+    be = _backend(kind)
+    eng = Engine(
+        model=_model(),
+        faults=FaultInjector(fail=fault_map(seed, 5)),
+        backend=be,
+    )
+    results: dict = {}
+    eng.run(dag, results=results)
+    assert counts == {name: 1 for name in dag.jobs}
+    if isinstance(be, BatchedBackend):
+        assert be._cache == {}
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=10_000),
+    schedule=st.sampled_from(SCHEDULES),
+    kind=st.sampled_from(["batched", "multihost"]),
+)
+def test_rescue_resumes_without_reexecution(seed, schedule, kind):
+    """Exhausting the collector's retries crashes the run AFTER the leaf
+    frontier committed; the rescued rerun completes WITHOUT re-executing
+    any committed job (the driver re-injects rescued values, DAGMan
+    rescue-DAG style) — on both backends, both schedulers."""
+    import json as _json
+    import tempfile
+
+    n = 3 + seed % 3
+    rescue = Path(tempfile.mkdtemp()) / f"r_{seed}_{schedule}_{kind}.json"
+    counts: dict[str, int] = {}
+    dag = fanout_dag(n, counts, retries=1)
+    # the collector fails more times than its retry budget -> crash
+    eng = Engine(
+        model=_model(),
+        faults=FaultInjector(fail={"collect": 5}),
+        rescue_path=rescue,
+        schedule=schedule,
+        backend=_backend(kind),
+    )
+    with pytest.raises(RuntimeError, match="exhausted retries"):
+        eng.run(dag, results={})
+    assert rescue.exists()
+    done_first = set(_json.loads(rescue.read_text()))
+    assert done_first == {f"leaf_{i}" for i in range(n)}, "leaf frontier must be rescued"
+    assert counts == {f"leaf_{i}": 1 for i in range(n)}
+    # second run: same DAG shape, fault gone, SAME rescue file; the
+    # driver re-injects the rescued values
+    counts2: dict[str, int] = {}
+    dag2 = fanout_dag(n, counts2, retries=1)
+    results: dict = {
+        f"leaf_{i}": 10 * i for i in range(n) if f"leaf_{i}" in done_first
+    }
+    eng2 = Engine(
+        model=_model(), rescue_path=rescue, schedule=schedule, backend=_backend(kind)
+    )
+    eng2.run(dag2, results=results)
+    assert results["collect"] == sum(10 * i for i in range(n))
+    # committed jobs were NOT re-executed; only the collector ran
+    assert counts2 == {"collect": 1}
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=10_000),
+    kind=st.sampled_from(["batched", "multihost"]),
+    schedule=st.sampled_from(SCHEDULES),
+)
+def test_speculation_never_duplicates_execution(seed, kind, schedule):
+    """Straggler speculation duplicates SIMULATED time only: with an
+    outlier sim_compute_s job, speculative copies appear in the report
+    but every callable still runs exactly once."""
+    counts: dict[str, int] = {}
+    dag = fanout_dag(5, counts)
+    # make one leaf a simulated straggler
+    dag.jobs[f"leaf_{seed % 5}"].sim_compute_s = 50.0
+    for i in range(5):
+        if i != seed % 5:
+            dag.jobs[f"leaf_{i}"].sim_compute_s = 1.0
+    results: dict = {}
+    eng = Engine(
+        model=_model(),
+        straggler_factor=3.0,
+        schedule=schedule,
+        backend=_backend(kind),
+    )
+    rep = eng.run(dag, results=results)
+    assert results["collect"] == sum(10 * i for i in range(5))
+    assert counts == {name: 1 for name in dag.jobs}
+    assert rep.speculative >= 1
+
+
+def test_rescue_skips_batched_fuse_for_done_jobs():
+    """A rescued (already-done) job must not be pulled into a fused
+    dispatch: the batched backend only fuses peers that still need
+    executing."""
+    counts: dict[str, int] = {}
+    dag = fanout_dag(3, counts)
+    # mark leaf_0 as already done (rescue semantics) with its result
+    dag.jobs["leaf_0"].status = "done"
+    results = {"leaf_0": 0}
+    eng = Engine(model=_model(), backend=BatchedBackend())
+    eng.run(dag, results=results)
+    assert counts.get("leaf_0", 0) == 0
+    assert counts["leaf_1"] == 1 and counts["leaf_2"] == 1
+    assert results["collect"] == 30

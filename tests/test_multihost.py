@@ -1,29 +1,131 @@
-"""Multi-host mesh scaffold: single-process fallback semantics in-process
-and the CPU two-subprocess ``jax.distributed`` smoke test.
+"""Multi-host backend: single-process fallback semantics in-process,
+unit tests for the ownership/shipping primitives, and the CPU
+two-subprocess ``jax.distributed`` smoke test.
 
-The subprocess test is the CI guard for ROADMAP follow-on (a): two host
-processes bring up one ``jax.distributed`` runtime, agree on the global
-device topology, build the same multi-host site mesh, exchange data with
-a real cross-process collective (gloo CPU backend), and run a SiteJob
-DAG through ``Engine(backend="multihost")`` with identical results on
-every process.
+The subprocess test is the CI guard for ROADMAP follow-on (a), now
+completed: two host processes bring up one ``jax.distributed`` runtime,
+agree on the global device topology, exchange data with a real
+cross-process collective (gloo CPU backend), and run a SiteJob DAG
+through ``Engine(backend="multihost")`` with TRUE site ownership — each
+site's jobs execute on exactly one process, results ship to every
+process, and the final results are identical everywhere.  (The full
+2-/3-process × app × schedule matrix lives in
+``tests/test_backend_conformance.py``.)
 """
 
 import json
+import pickle
 import socket
 import subprocess
 import sys
 import textwrap
 from pathlib import Path
 
+import numpy as np
 import pytest
 
+from repro.compat import pack_payload, unpack_payload
+from repro.launch.mesh import allgather_bytes, site_ownership
 from repro.runtime.backends import MultiHostBackend
-from repro.workflow.dag import DAG
+from repro.workflow.dag import DAG, TimedResult
 from repro.workflow.engine import Engine
+from repro.workflow.executor import ExecutionBackend, Partition
 from repro.workflow.overhead import GridModel
 
 SRC = str(Path(__file__).resolve().parent.parent / "src")
+
+
+class TestSiteOwnership:
+    def test_round_robin_uniform(self):
+        assert site_ownership([0, 1, 2, 3], n_processes=2) == {0: 0, 1: 1, 2: 0, 3: 1}
+        assert site_ownership([0, 1, 2, 3, 4], n_processes=3) == {
+            0: 0, 1: 1, 2: 2, 3: 0, 4: 1,
+        }
+
+    def test_uneven_sites_stay_balanced(self):
+        owner = site_ownership([0, 1, 2], n_processes=2)
+        counts = [sum(1 for p in owner.values() if p == pid) for pid in range(2)]
+        assert sorted(counts) == [1, 2]
+
+    def test_single_process_owns_everything(self):
+        assert set(site_ownership([0, 5, 9], n_processes=1).values()) == {0}
+
+    def test_deterministic_and_order_insensitive(self):
+        a = site_ownership([3, 1, 2, 0], n_processes=2)
+        b = site_ownership([0, 1, 2, 3], n_processes=2)
+        assert a == b
+
+    def test_uniform_weights_cancel_to_round_robin(self):
+        # a uniform per-site weight (e.g. GridModel.workers_per_site)
+        # cannot change a balance — identical map with and without it
+        uniform = {s: 4.0 for s in range(4)}
+        assert site_ownership([0, 1, 2, 3], n_processes=2, site_weights=uniform) == {
+            0: 0, 1: 1, 2: 0, 3: 1,
+        }
+
+    def test_heterogeneous_weights_skew_the_balance(self):
+        # one heavy site fills its owner; the light sites pack elsewhere
+        owner = site_ownership(
+            [0, 1, 2], n_processes=2, site_weights={0: 10.0, 1: 1.0, 2: 1.0}
+        )
+        assert owner[0] == 0 and owner[1] == 1 and owner[2] == 1
+
+    def test_mesh_capacity_proportional(self):
+        # a process holding more mesh devices owns proportionally more
+        # sites (2 devices on p0, 1 on p1 -> p0 owns 2 of 3 sites)
+        class _Dev:
+            def __init__(self, p):
+                self.process_index = p
+
+        class _Mesh:
+            class devices:
+                flat = [_Dev(0), _Dev(0), _Dev(1)]
+
+        owner = site_ownership([0, 1, 2], mesh=_Mesh())
+        assert owner == {0: 0, 1: 1, 2: 0}
+
+    def test_invalid_process_count(self):
+        with pytest.raises(ValueError, match="n_processes"):
+            site_ownership([0], n_processes=0)
+
+
+class TestPayloadShim:
+    """compat.pack_payload/unpack_payload — the pytree-leaf serialization
+    that lets non-array SiteJob outputs (itemset dicts, CommLogs) ride
+    the process_allgather wire."""
+
+    def test_jax_arrays_become_host_numpy(self):
+        import jax.numpy as jnp
+
+        tr = TimedResult((jnp.arange(4), {"k": jnp.ones((2, 2))}), 0.25)
+        out = unpack_payload(pack_payload(tr))
+        assert isinstance(out, TimedResult) and out.compute_s == 0.25
+        arr, d = out.value
+        assert isinstance(arr, np.ndarray) and arr.tolist() == [0, 1, 2, 3]
+        assert isinstance(d["k"], np.ndarray) and d["k"].dtype == np.float32
+
+    def test_itemset_dicts_round_trip(self):
+        payload = {"frequent": {(0, 1): 7, (2,): 3}, "pool": [(0,), (0, 1)]}
+        assert unpack_payload(pack_payload(payload)) == payload
+
+    def test_mining_result_dataclasses_round_trip(self):
+        from repro.core.gfm import CommLog
+
+        comm = CommLog()
+        comm.add_round(10, 8, 3)
+        out = unpack_payload(pack_payload(TimedResult(comm, 0.0))).value
+        assert out.rounds == 1 and out.bytes_sent == comm.bytes_sent
+
+    def test_wire_is_plain_pickle_of_host_tree(self):
+        # the wire must never require a live jax runtime to decode
+        data = pack_payload([1, "x", None])
+        assert pickle.loads(data) == [1, "x", None]
+
+
+class TestAllgatherBytes:
+    def test_single_process_identity(self):
+        assert allgather_bytes(b"abc") == [b"abc"]
+        assert allgather_bytes(b"") == [b""]
 
 
 class TestSingleProcessFallback:
@@ -48,11 +150,146 @@ class TestSingleProcessFallback:
         dag.job("a", lambda: 2)
         dag.job("b", lambda a: a + 3, deps=["a"])
         results = {}
-        rep = Engine(model=GridModel(prep_latency_s=0.0), backend="multihost").run(
+        be = MultiHostBackend()
+        rep = Engine(model=GridModel(prep_latency_s=0.0), backend=be).run(
             dag, results=results
         )
         assert results["b"] == 5
         assert rep.backend == "multihost"
+        # no partition on a single process: everything executed locally
+        assert rep.n_processes == 1 and rep.owned_jobs is None
+        assert be.executed_log == ["a", "b"] and be.shipped_log == []
+
+    def test_partition_none_single_process(self):
+        dag = DAG("d")
+        dag.job("a", lambda: 1, site=0)
+        dag.job("b", lambda: 2, site=1)
+        assert MultiHostBackend().partition(dag, GridModel()) is None
+
+    def test_partition_sites_false_disables_ownership(self, monkeypatch):
+        be = MultiHostBackend(partition_sites=False)
+        be._ensure()
+        monkeypatch.setattr(be, "is_multiprocess", True)
+        dag = DAG("d")
+        dag.job("a", lambda: 1, site=0)
+        assert be.partition(dag, GridModel()) is None
+
+    def test_partition_derives_from_mesh(self, monkeypatch):
+        """Force the multi-process branch on a single-process runtime:
+        every mesh device is local, so this process owns every site —
+        the map is still derived and exposed."""
+        be = MultiHostBackend()
+        be._ensure()
+        monkeypatch.setattr(be, "is_multiprocess", True)
+        dag = DAG("d")
+        dag.job("a", lambda: 1, site=0)
+        dag.job("b", lambda: 2, site=1)
+        dag.job("c", lambda: 3, site=0)
+        part = be.partition(dag, GridModel())
+        assert part is not None
+        assert part.owned == frozenset({"a", "b", "c"})
+        assert part.owner_of == {"a": 0, "b": 0, "c": 0}
+        assert part.owned_sites == (0, 1)
+
+    def test_owner_shipping_path_round_trips(self):
+        """The owner-side ship path in-process: pack -> allgather
+        (identity) -> unpack; untimed callables get the owner's host
+        bracket; the engine-visible value is the round-tripped one."""
+        from repro.workflow.executor import Partition as P
+
+        be = MultiHostBackend()
+        be._ensure()
+        dag = DAG("d")
+        job = dag.job("a", lambda: {"frequent": {(0, 1): 7}}, site=0)
+        be._partition = P(
+            owned=frozenset({"a"}),
+            owner_of={"a": 0},
+            n_processes=1,
+            process_index=0,
+            owned_sites=(0,),
+        )
+        out = be.call(job, [])
+        assert isinstance(out, TimedResult)
+        assert out.value == {"frequent": {(0, 1): 7}}
+        assert out.compute_s >= 0.0
+        assert be.executed_log == ["a"] and be.shipped_log == []
+
+    def test_owned_job_exception_ships_instead_of_stranding_peers(self):
+        """An owned job's fn raising must NOT propagate before the
+        collective (the peers would deadlock in process_allgather) — the
+        exception ships and every process raises it after the shipment."""
+        from repro.workflow.executor import Partition as P
+
+        be = MultiHostBackend()
+        be._ensure()
+        dag = DAG("d")
+
+        def boom():
+            raise ValueError("corrupt site data")
+
+        job = dag.job("a", boom, site=0)
+        be._partition = P(
+            owned=frozenset({"a"}),
+            owner_of={"a": 0},
+            n_processes=1,
+            process_index=0,
+            owned_sites=(0,),
+        )
+        with pytest.raises(RuntimeError, match="failed on its owning process 0.*corrupt"):
+            be.call(job, [])
+
+
+class _RemoteStub(ExecutionBackend):
+    """A backend that claims another process owns some jobs — exercises
+    the engine's owner-only-timing invariant without a real runtime."""
+
+    name = "stub"
+
+    def __init__(self, owned: set[str], ship_timed: bool = True):
+        self._owned = owned
+        self.ship_timed = ship_timed
+
+    def partition(self, dag, model=None) -> Partition:
+        owner_of = {n: (0 if n in self._owned else 1) for n in dag.jobs}
+        return Partition(
+            owned=frozenset(self._owned),
+            owner_of=owner_of,
+            n_processes=2,
+            process_index=0,
+            owned_sites=(0,),
+        )
+
+    def call(self, job, args):
+        if job.name in self._owned:
+            return job.fn(*args)
+        # pretend the owner shipped it
+        out = job.fn(*args)
+        return TimedResult(out, 0.125) if self.ship_timed else out
+
+
+class TestEngineOwnershipContract:
+    def test_report_carries_partition(self):
+        dag = DAG("d")
+        dag.job("a", lambda: 1, site=0)
+        dag.job("b", lambda a: a + 1, deps=["a"], site=1)
+        rep = Engine(
+            model=GridModel(prep_latency_s=0.0), backend=_RemoteStub({"a"})
+        ).run(dag)
+        assert rep.n_processes == 2 and rep.process_index == 0
+        assert rep.owned_jobs == ("a",) and rep.owned_sites == (0,)
+        # the non-owned job's shipped time feeds the global ledger
+        assert rep.job_times["b"] == pytest.approx(0.125)
+
+    def test_non_owned_job_must_ship_timedresult(self):
+        dag = DAG("d")
+        dag.job("a", lambda: 1, site=0)
+        dag.job("b", lambda a: a + 1, deps=["a"], site=1)
+        eng = Engine(
+            model=GridModel(prep_latency_s=0.0),
+            backend=_RemoteStub({"a"}, ship_timed=False),
+        )
+        with pytest.raises(RuntimeError, match="owner-measured TimedResult"):
+            eng.run(dag)
 
 
 CHILD = textwrap.dedent(
@@ -62,9 +299,8 @@ CHILD = textwrap.dedent(
     import os
     os.environ["JAX_PLATFORMS"] = "cpu"
     import jax
-    from repro.launch.mesh import init_multihost, make_multihost_mesh
     from repro.runtime.backends import MultiHostBackend
-    from repro.workflow.dag import DAG
+    from repro.workflow.dag import DAG, TimedResult
     from repro.workflow.engine import Engine
     from repro.workflow.overhead import GridModel
 
@@ -75,11 +311,13 @@ CHILD = textwrap.dedent(
     info = be.describe()
     gathered = be.allgather_check(float(pid + 1)).reshape(-1).tolist()
 
+    # two sites, two processes: site i's job must execute ONLY on its
+    # owning process; results ship and agree everywhere
     dag = DAG("smoke")
-    dag.job("a", lambda: 20)
-    dag.job("b", lambda a: a + 22, deps=["a"])
+    dag.job("a", lambda: TimedResult(20, 0.0), site=0)
+    dag.job("b", lambda a: TimedResult(a + 22, 0.0), deps=["a"], site=1)
     results = {{}}
-    rep = Engine(model=GridModel(prep_latency_s=0.0), backend="multihost").run(
+    rep = Engine(model=GridModel(prep_latency_s=0.0), backend=be).run(
         dag, results=results
     )
     print("MULTIHOST " + json.dumps({{
@@ -90,8 +328,13 @@ CHILD = textwrap.dedent(
         "mesh_shape": info["mesh_shape"],
         "is_multiprocess": info["is_multiprocess"],
         "gathered": gathered,
-        "result": results["b"],
+        "result": int(results["b"]),
         "backend": rep.backend,
+        "n_processes": rep.n_processes,
+        "owned_jobs": list(rep.owned_jobs or []),
+        "owned_sites": list(rep.owned_sites or []),
+        "executed": list(be.executed_log),
+        "shipped": sorted(be.shipped_log),
     }}), flush=True)
     """
 )
@@ -105,8 +348,8 @@ def _free_port() -> int:
 
 def test_two_process_cpu_smoke(tmp_path):
     """Two host processes, one distributed runtime: global topology,
-    cross-process all_gather, and identical multihost-backend DAG
-    results on both processes."""
+    cross-process all_gather, true per-process site ownership, and
+    identical shipped DAG results on both processes."""
     port = _free_port()
     script = tmp_path / "child.py"
     script.write_text(CHILD.format(src=SRC, port=port))
@@ -143,6 +386,12 @@ def test_two_process_cpu_smoke(tmp_path):
         assert info["mesh_shape"] == {"sites": 2}
         # the cross-process collective really crossed processes
         assert info["gathered"] == [1.0, 2.0]
-        # SPMD-redundant execution: identical results on every process
+        # shipped results are identical on every process
         assert info["result"] == 42
         assert info["backend"] == "multihost"
+        assert info["n_processes"] == 2
+    # TRUE ownership: each site's job executed on exactly one process
+    assert infos[0]["executed"] == ["a"] and infos[0]["shipped"] == ["b"]
+    assert infos[1]["executed"] == ["b"] and infos[1]["shipped"] == ["a"]
+    assert infos[0]["owned_jobs"] == ["a"] and infos[1]["owned_jobs"] == ["b"]
+    assert infos[0]["owned_sites"] == [0] and infos[1]["owned_sites"] == [1]
