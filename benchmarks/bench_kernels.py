@@ -2,21 +2,33 @@
 algorithms spend their time in.  On this CPU container we time the jnp
 oracle (the Pallas kernels target TPU and run here only under the
 interpreter); the derived column reports achieved GB/s / GFLOP/s so the
-roofline context is visible."""
+roofline context is visible.
+
+``--out`` writes the rows as JSON (``{"kernels": [{name, seconds, ...}]}``)
+— the committed ``BENCH_kernels_baseline.json`` is this file's output, and
+``compare_baseline --kernels-baseline/--kernels-candidate`` gates fresh
+runs against it so a kernel regression is caught even when scheduler
+noise hides it in end-to-end wall time.
+"""
 
 from __future__ import annotations
+
+import argparse
+import json
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import row, timeit
-from repro.core.apriori import pack_bool_matrix, pack_itemsets
-from repro.kernels.ref import kmeans_assign_ref, support_count_ref
 
 
-def run():
+def run(out: str | None = None) -> dict:
+    from repro.core.apriori import pack_bool_matrix, pack_itemsets
+    from repro.kernels.ref import kmeans_assign_ref, support_count_ref
+
     rng = np.random.default_rng(0)
+    cells: list[dict] = []
 
     # kmeans assignment: N x K distance + argmin
     n, d, k = 65_536, 32, 64
@@ -27,6 +39,7 @@ def run():
     dt = timeit(lambda: jax.block_until_ready(f(x, c)))
     flops = 2 * n * d * k
     row("kmeans_assign_jnp", dt, f"gflops={flops / dt / 1e9:.1f};N={n};D={d};K={k}")
+    cells.append({"name": "kmeans_assign_jnp", "seconds": dt, "gflops": flops / dt / 1e9})
 
     # support counting: bitmap AND+match over (tx x candidates)
     ntx, items, cands = 32_768, 128, 512
@@ -37,15 +50,32 @@ def run():
     g = jax.jit(support_count_ref)
     jax.block_until_ready(g(tx, masks))
     dt = timeit(lambda: jax.block_until_ready(g(tx, masks)))
-    cells = ntx * cands * tx.shape[1]
-    row("support_count_jnp", dt, f"gcells={cells / dt / 1e9:.2f};tx={ntx};cands={cands}")
+    gcells = ntx * cands * tx.shape[1]
+    row("support_count_jnp", dt, f"gcells={gcells / dt / 1e9:.2f};tx={ntx};cands={cands}")
+    cells.append({"name": "support_count_jnp", "seconds": dt, "gcells": gcells / dt / 1e9})
 
     # Pallas kernels (interpret mode — correctness surface, not speed)
     from repro.kernels import ops
 
     dt = timeit(lambda: jax.block_until_ready(ops.kmeans_assign(x[:4096], c)), repeats=1, warmup=1)
     row("kmeans_assign_pallas_interpret", dt, "interpret=True (CPU correctness mode)")
+    cells.append({"name": "kmeans_assign_pallas_interpret", "seconds": dt})
+
+    result = {"kernels": cells}
+    if out:
+        with open(out, "w") as fh:
+            json.dump(result, fh, indent=2, sort_keys=True)
+        print(f"# wrote {out}")
+    return result
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=None, help="write rows as JSON here")
+    args = ap.parse_args()
+    run(out=args.out)
+    return 0
 
 
 if __name__ == "__main__":
-    run()
+    raise SystemExit(main())

@@ -180,6 +180,45 @@ def compare(
     return failures, notes
 
 
+def compare_kernels(
+    baseline: dict,
+    candidate: dict,
+    tol_kernels: float = 1.0,
+) -> tuple[list[str], list[str]]:
+    """Kernel microbench gate: per-kernel median seconds vs the committed
+    ``BENCH_kernels_baseline.json``.
+
+    The band is deliberately GENEROUS (default 100%, i.e. fail only past
+    2x the committed time): CI runners are shared and a microbench's
+    absolute time swings with the host, but an accidentally-deoptimized
+    kernel (lost jit cache, dtype promotion to f64, a fallback path) costs
+    an order of magnitude and still trips it — which is the regression
+    class end-to-end wall time hides behind scheduler noise.  Coverage is
+    strict as everywhere else: a kernel present in the baseline must
+    appear in the candidate."""
+    failures: list[str] = []
+    notes: list[str] = []
+    base = {c["name"]: c for c in baseline.get("kernels", [])}
+    cand = {c["name"]: c for c in candidate.get("kernels", [])}
+    for name, b in sorted(base.items()):
+        c = cand.get(name)
+        if c is None:
+            failures.append(f"kernel {name}: missing from candidate run")
+            continue
+        bs, cs = float(b["seconds"]), float(c["seconds"])
+        if cs > bs * (1 + tol_kernels) + 1e-9:
+            failures.append(
+                f"kernel {name}: regressed {bs * 1e6:.1f}us -> {cs * 1e6:.1f}us "
+                f"(tolerance {tol_kernels:.0%})"
+            )
+        elif cs < bs * (1 - min(tol_kernels, 0.5)):
+            notes.append(
+                f"kernel {name}: improved {bs * 1e6:.1f}us -> {cs * 1e6:.1f}us "
+                f"— refresh the kernels baseline"
+            )
+    return failures, notes
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--baseline", default="BENCH_baseline.json")
@@ -187,6 +226,11 @@ def main() -> int:
     ap.add_argument("--tol-strict", type=float, default=0.01)
     ap.add_argument("--tol-wall", type=float, default=0.30)
     ap.add_argument("--tol-overhead-pts", type=float, default=5.0)
+    # optional kernels section: both paths given -> the microbench gate
+    # runs alongside the sweep gate (one exit code for CI)
+    ap.add_argument("--kernels-baseline", default=None)
+    ap.add_argument("--kernels-candidate", default=None)
+    ap.add_argument("--tol-kernels", type=float, default=1.0)
     args = ap.parse_args()
 
     with open(args.baseline) as f:
@@ -201,15 +245,26 @@ def main() -> int:
         tol_wall=args.tol_wall,
         tol_overhead_pts=args.tol_overhead_pts,
     )
+    n_kernels = 0
+    if args.kernels_baseline and args.kernels_candidate:
+        with open(args.kernels_baseline) as f:
+            kb = json.load(f)
+        with open(args.kernels_candidate) as f:
+            kc = json.load(f)
+        kfail, knotes = compare_kernels(kb, kc, tol_kernels=args.tol_kernels)
+        failures.extend(kfail)
+        notes.extend(knotes)
+        n_kernels = len(kb.get("kernels", []))
     for n in notes:
         print(f"NOTE  {n}")
     for f_ in failures:
         print(f"FAIL  {f_}")
     n_cells = len(baseline.get("cells", []))
+    scope = f"{n_cells} baseline cells" + (f" + {n_kernels} kernels" if n_kernels else "")
     if failures:
-        print(f"# perf gate: {len(failures)} regression(s) across {n_cells} baseline cells")
+        print(f"# perf gate: {len(failures)} regression(s) across {scope}")
         return 1
-    print(f"# perf gate: OK ({n_cells} baseline cells within tolerance)")
+    print(f"# perf gate: OK ({scope} within tolerance)")
     return 0
 
 

@@ -178,6 +178,20 @@ def allgather_bytes(data: bytes) -> list[bytes]:
     return [mat[p, : int(lens[p])].tobytes() for p in range(len(lens))]
 
 
+def allgather_payload(obj) -> list:
+    """One-object-per-process shipment over :func:`allgather_bytes`:
+    pack an arbitrary pytree payload (``compat.pack_payload`` — jax array
+    leaves to host numpy, everything else pickled), gather every
+    process's bytes in ONE ``allgather_bytes`` round, and unpack each
+    slice.  This is the batched-shipment wire: the multihost backend
+    ships a whole ready wave's result dict through one call instead of
+    one ``allgather_bytes`` per job, so the collective count scales with
+    waves, not jobs."""
+    from repro.compat import pack_payload, unpack_payload
+
+    return [unpack_payload(b) for b in allgather_bytes(pack_payload(obj))]
+
+
 def make_site_mesh(n_sites: int, axis: str = "sites"):
     """1-D grid-site mesh for the mining runtime (one device per paper
     "site"), or None when the host exposes fewer devices than sites —

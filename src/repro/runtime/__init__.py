@@ -5,6 +5,12 @@ Bridges the repo's two halves: the paper-faithful mining algorithms
 (``repro.workflow``).  ``GridRuntime`` executes both applications
 end-to-end through ``workflow.engine.Engine`` on a real JAX device mesh,
 with measured kernel time calibrating the simulated grid clock.
+
+Runtime-built engines default to the BATCHED execution backend (fused
+vmapped fan-out dispatch, proven bit-identical to inline by the
+conformance suite); ``backend="inline"`` restores the per-job host loop,
+and ``MultiHostBackend`` distributes the same DAGs over a
+``jax.distributed`` process mesh with wave-fused result shipping.
 """
 
 from repro.runtime.backends import MultiHostBackend

@@ -14,16 +14,27 @@ is uniform and therefore balance-neutral), and then:
   * each process executes ONLY the jobs of its owned sites — a 3-process
     run really does run each site's mining on exactly one process
     (``executed_log`` is the audit trail the conformance harness checks);
-  * each executed job's result — wrapped in an owner-measured
-    ``TimedResult`` — ships to every process through one
-    ``allgather_bytes`` shipment (two ``process_allgather`` rounds:
-    lengths, then padded payloads; ``compat.pack_payload`` converts
-    jax-array pytree leaves to host numpy and pickles non-array outputs
-    such as itemset dicts);
+  * execution is WAVE-FUSED by default (``fuse_waves=True``): at the
+    first ``call`` of each ready wave the backend takes the whole wave
+    (``executor.ready_wave``), groups it by ``batch_key``
+    (``executor.group_wave``), runs ONE fused vmapped dispatch per group
+    over its owned members (the ``sitejob.timed_batch`` contract — the
+    fused call is measured once and each member's share is its
+    owner-measured time), and ships ALL of the wave's results in ONE
+    ``allgather_bytes`` round — so the collective count scales with
+    ready WAVES, not jobs, which is the paper's communication-round
+    overhead collapsed at its source.  ``fuse_waves=False`` restores the
+    per-job shipment rounds (one collective per executed job);
+  * every shipment moves owner-measured ``TimedResult`` payloads
+    (``compat.pack_payload`` converts jax-array pytree leaves to host
+    numpy and pickles non-array outputs such as itemset dicts), and the
+    per-run counts are ledgered (``shipments`` / ``collective_rounds`` /
+    ``shipped_results``, surfaced on ``RunReport``) so the O(jobs) ->
+    O(waves) reduction is measurable, not asserted by hand;
   * every process keeps scheduling the WHOLE DAG — placement, the
     simulated clock and the ledger are globally consistent because every
     process sees the same owner-measured times, so both engine schedulers
-    replay the identical event order everywhere and the per-job shipments
+    replay the identical event order everywhere and the wave shipments
     are the only collectives (the paper's synchronization traffic and
     nothing else).
 
@@ -50,12 +61,18 @@ import numpy as np
 from repro.compat import pack_payload, unpack_payload
 from repro.launch.mesh import (
     allgather_bytes,
+    allgather_payload,
     init_multihost,
     make_multihost_mesh,
     site_ownership,
 )
 from repro.workflow.dag import DAG, Job, TimedResult
-from repro.workflow.executor import ExecutionBackend, Partition
+from repro.workflow.executor import (
+    ExecutionBackend,
+    Partition,
+    group_wave,
+    ready_wave,
+)
 
 
 class _ShippedError:
@@ -76,8 +93,14 @@ class MultiHostBackend(ExecutionBackend):
     single-process" — the backend never guesses a coordinator.
 
     ``partition_sites=False`` restores the pre-ownership SPMD-redundant
-    mode (every process executes every job; no shipping) — kept for A/B
-    measurements of shipping vs redundancy.
+    mode (every process executes every job; no shipping);
+    ``fuse_waves=False`` restores per-job shipment rounds (one collective
+    per executed job) — both kept for A/B measurements against the
+    wave-fused default.  ``force_partition=True`` derives the ownership
+    map even on a single-process runtime (everything owned locally, the
+    collectives degenerate to identity) — the seam that lets unit tests
+    and the collective-count benchmark exercise the partitioned shipping
+    paths and their ledger without a process group.
     """
 
     name = "multihost"
@@ -89,20 +112,35 @@ class MultiHostBackend(ExecutionBackend):
         process_id: int | None = None,
         axis: str = "sites",
         partition_sites: bool = True,
+        fuse_waves: bool = True,
+        force_partition: bool = False,
     ):
         self.coordinator_address = coordinator_address
         self.num_processes = num_processes
         self.process_id = process_id
         self.axis = axis
         self.partition_sites = partition_sites
+        self.fuse_waves = fuse_waves
+        self.force_partition = force_partition
         self._ready = False
         self.is_multiprocess = False
         self.mesh = None
         self._partition: Partition | None = None
+        self._dag: DAG | None = None
+        self._results: dict | None = None
+        # wave-fused shipping: results of the current ready wave, merged
+        # from every process's shipment, consumed one ``call`` at a time
+        self._wave_cache: dict[str, Any] = {}
         # audit trails for the conformance harness: which jobs' callables
         # ran in THIS process, and which arrived as shipped results
         self.executed_log: list[str] = []
         self.shipped_log: list[str] = []
+        # per-run collective/shipment ledger (ExecutionBackend.ledger):
+        # wave-fused shipping makes shipments O(waves); per-job O(jobs)
+        self.shipments = 0
+        self.collective_rounds = 0
+        self.shipped_results = 0
+        self.waves = 0
         if coordinator_address is not None or num_processes is not None:
             # explicit coordinator args = the caller WANTS a distributed
             # runtime, and jax.distributed.initialize must beat the
@@ -163,8 +201,28 @@ class MultiHostBackend(ExecutionBackend):
     def begin_run(self, dag: DAG, results: dict) -> None:
         self._ensure()
         self._partition = None
+        self._dag = dag
+        self._results = results
+        self._wave_cache.clear()
         self.executed_log.clear()
         self.shipped_log.clear()
+        self.shipments = 0
+        self.collective_rounds = 0
+        self.shipped_results = 0
+        self.waves = 0
+
+    def ledger(self) -> dict:
+        """The per-run collective/shipment counts (copied onto
+        ``RunReport`` by the engine): ``shipments`` = result-shipment
+        collectives performed, ``collective_rounds`` = underlying
+        ``process_allgather`` rounds (two per shipment: lengths, then
+        padded payloads), ``shipped_results`` = job results that arrived
+        from OTHER processes.  All zero on an unpartitioned run."""
+        return {
+            "shipments": self.shipments,
+            "collective_rounds": self.collective_rounds,
+            "shipped_results": self.shipped_results,
+        }
 
     def partition(self, dag: DAG, model=None) -> Partition | None:
         """Derive the ``site -> process`` ownership map for this DAG from
@@ -173,7 +231,7 @@ class MultiHostBackend(ExecutionBackend):
         ``partition_sites=False`` — return None: everything runs locally.
         """
         self._ensure()
-        if not self.is_multiprocess or not self.partition_sites:
+        if not (self.is_multiprocess or self.force_partition) or not self.partition_sites:
             return None
         sites = sorted({j.site for j in dag.jobs.values()})
         # capacity-proportional over the mesh's processes; the grid
@@ -201,6 +259,13 @@ class MultiHostBackend(ExecutionBackend):
             # execution — same results, no distributed state touched
             self.executed_log.append(job.name)
             return job.fn(*args)
+        if self.fuse_waves and self._dag is not None:
+            return self._call_wave(job, part)
+        # per-job wire: also the path for direct call() usage outside a
+        # begin_run/end_run bracket, where no DAG is available to wave over
+        return self._call_per_job(job, args, part)
+
+    def _call_per_job(self, job: Job, args: list, part: Partition) -> Any:
         if job.name in part.owned:
             # owner: execute for real, normalize to an owner-measured
             # TimedResult (untimed callables get the host bracket HERE, on
@@ -229,19 +294,127 @@ class MultiHostBackend(ExecutionBackend):
         # guarantees they arrive in lockstep — and the owner's slot
         # carries the result
         shipped = allgather_bytes(payload)
+        self.shipments += 1
+        self.collective_rounds += 2
         out = unpack_payload(shipped[part.owner_of[job.name]])
+        if job.name not in part.owned and not isinstance(out, _ShippedError):
+            self.shipped_results += 1
+        return self._adopt(job.name, out, part)
+
+    # -- wave-fused execution ------------------------------------------------
+
+    def _call_wave(self, job: Job, part: Partition) -> Any:
+        """Wave-fused shipping: a cache miss means ``job`` opens a new
+        ready wave — execute this process's owned slice of the whole wave
+        (one fused dispatch per batch group) and ship every result in ONE
+        collective; hits consume the merged wave cache."""
+        if job.name not in self._wave_cache:
+            self._ship_wave(part)
+        out = self._wave_cache.pop(job.name)
+        return self._adopt(job.name, out, part)
+
+    def _ship_wave(self, part: Partition) -> None:
+        assert self._dag is not None and self._results is not None
+        wave = ready_wave(self._dag, self._results, skip=self._wave_cache)
+        local: dict[str, Any] = {}
+        ran: list[str] = []  # logged executed only once actually shipped
+        for group in group_wave(wave):
+            owned = [j for j in group if j.name in part.owned]
+            if not owned:
+                continue
+            if len(owned) >= 2 and owned[0].batched_fn is not None:
+                self._run_owned_fused(owned, local, ran)
+            else:
+                # singleton slice (or unbatchable job): the plain owner
+                # bracket — no vmap-of-one overhead
+                for j in owned:
+                    local[j.name] = self._run_owned_one(j, ran)
+        try:
+            blob_ok = True
+            shipped = allgather_payload(local)
+        except Exception as e:  # noqa: BLE001 - a result that cannot
+            # serialize must not strand the peers: re-join the collective
+            # shipping errors for this process's whole slice instead
+            blob_ok = False
+            err = _ShippedError(f"{type(e).__name__}: {e}")
+            shipped = allgather_payload(dict.fromkeys(local, err))
+        if blob_ok:
+            self.executed_log.extend(ran)
+        self.shipments += 1
+        self.collective_rounds += 2
+        self.waves += 1
+        # merge: the per-process slices are disjoint (each job has one
+        # owner) and their union covers the wave — every process adopts
+        # the identical round-tripped cache
+        for pid, slice_ in enumerate(shipped):
+            if pid != part.process_index:
+                self.shipped_results += sum(
+                    1 for v in slice_.values() if not isinstance(v, _ShippedError)
+                )
+            self._wave_cache.update(slice_)
+        missing = [j.name for j in wave if j.name not in self._wave_cache]
+        if missing:  # pragma: no cover - ownership covers every job
+            raise RuntimeError(
+                f"wave shipment incomplete: no owner shipped {missing!r}"
+            )
+
+    def _run_owned_fused(self, owned: list[Job], local: dict, ran: list[str]) -> None:
+        """ONE fused dispatch over this process's owned slice of a batch
+        group.  Only owned member names are passed to ``batched_fn``, so
+        a ``timed_batch``-built group records measured shares for owned
+        jobs ONLY — the owner-only timing invariant holds by
+        construction (the ``owned=`` filter seam stays available for
+        redundantly-executing backends).  An untimed fused fn gets the
+        host bracket apportioned equally, mirroring ``timed_batch``."""
+        names = [j.name for j in owned]
+        t0 = time.perf_counter()
+        try:
+            argss = [[self._results[d] for d in j.deps] for j in owned]
+            outs = owned[0].batched_fn(names, [j.batch_arg for j in owned], argss)
+            if len(outs) != len(owned):
+                raise RuntimeError(
+                    f"batched_fn for {owned[0].batch_key!r} returned "
+                    f"{len(outs)} results for {len(owned)} jobs"
+                )
+            share = (time.perf_counter() - t0) / max(len(owned), 1)
+            for j, out in zip(owned, outs):
+                local[j.name] = out if isinstance(out, TimedResult) else TimedResult(out, share)
+            ran.extend(names)
+        except Exception as e:  # noqa: BLE001 - shipped, not swallowed
+            err = _ShippedError(f"{type(e).__name__}: {e}")
+            for j in owned:
+                local[j.name] = err
+
+    def _run_owned_one(self, job: Job, ran: list[str]):
+        """Execute one owned job for a wave shipment: owner-measured
+        TimedResult (untimed callables get the host bracket HERE, on the
+        one process that ran them) or a shipped error."""
+        assert self._results is not None
+        t0 = time.perf_counter()
+        try:
+            raw = job.fn(*[self._results[d] for d in job.deps])
+            if not isinstance(raw, TimedResult):
+                raw = TimedResult(raw, time.perf_counter() - t0)
+            ran.append(job.name)
+            return raw
+        except Exception as e:  # noqa: BLE001 - shipped, not swallowed
+            return _ShippedError(f"{type(e).__name__}: {e}")
+
+    def _adopt(self, name: str, out: Any, part: Partition) -> TimedResult:
+        """Normalize a shipped entry on every process: raise a shipped
+        owner-side failure everywhere together, guard the wire contract,
+        and adopt the round-tripped value (owner included) so the results
+        dict is bit-identical on every process."""
         if isinstance(out, _ShippedError):
             raise RuntimeError(
-                f"job {job.name!r} failed on its owning process "
-                f"{part.owner_of[job.name]}: {out.message}"
+                f"job {name!r} failed on its owning process "
+                f"{part.owner_of[name]}: {out.message}"
             )
         if not isinstance(out, TimedResult):  # pragma: no cover - wire guard
             raise RuntimeError(
-                f"shipped result for job {job.name!r} from process "
-                f"{part.owner_of[job.name]} is not an owner-measured TimedResult"
+                f"shipped result for job {name!r} from process "
+                f"{part.owner_of[name]} is not an owner-measured TimedResult"
             )
-        if job.name not in part.owned:
-            self.shipped_log.append(job.name)
-        # every process — owner included — adopts the round-tripped value,
-        # so the results dict is bit-identical everywhere
+        if name not in part.owned:
+            self.shipped_log.append(name)
         return out

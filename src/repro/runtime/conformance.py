@@ -201,16 +201,22 @@ def child_main(argv=None) -> dict:  # pragma: no cover - runs in the
     ap.add_argument("--sites", type=int, required=True)
     ap.add_argument("--apps", default=",".join(APPS))
     ap.add_argument("--schedules", default=",".join(SCHEDULES))
+    # --fuse 1 (default) = wave-fused shipping (one collective per ready
+    # wave); --fuse 0 = the PR-5 per-job shipment rounds.  Both modes must
+    # produce bit-identical digests — the CI matrix runs each.
+    ap.add_argument("--fuse", type=int, default=1, choices=(0, 1))
     args = ap.parse_args(argv)
 
     be = MultiHostBackend(
         coordinator_address=f"127.0.0.1:{args.port}",
         num_processes=args.nprocs,
         process_id=args.pid,
+        fuse_waves=bool(args.fuse),
     )
     report = {
         "pid": args.pid,
         "n_sites": args.sites,
+        "fuse_waves": bool(args.fuse),
         "topology": be.describe(),
         "cells": [],
     }
@@ -223,6 +229,10 @@ def child_main(argv=None) -> dict:  # pragma: no cover - runs in the
                 be._partition.owned_sites if be._partition is not None else []
             )
             mh["job_sites"] = job_sites(app, args.sites)
+            # the collective/shipment ledger for this cell: under wave
+            # fusion shipments must equal waves (O(waves) collectives);
+            # per-job mode ships once per executed job
+            mh["ledger"] = dict(be.ledger(), waves=int(be.waves))
             inline = conformance_cell(app, args.sites, schedule, "inline")
             report["cells"].append({"multihost": mh, "inline": inline})
 

@@ -130,13 +130,19 @@ class GridRuntime:
         # the runtime; None keeps the given engine's own settings (or the
         # Engine defaults) untouched.  A caller-supplied engine is never
         # mutated — a differing setting gets an equivalent engine.
+        #
+        # Runtime-built engines default to the BATCHED backend: the
+        # conformance suite proves it bit-identical to inline, and fused
+        # fan-out dispatch is the raw-speed win for wide grids.  Pass
+        # ``backend="inline"`` (or an explicit engine) to restore the
+        # per-job host loop.
         if engine is None:
             engine = Engine(
                 model=GridModel(),
                 overlap_prep=True,
                 schedule=schedule or "staged",
                 placement=placement or "fixed",
-                backend=backend or "inline",
+                backend=backend or "batched",
             )
         elif (
             (schedule is not None and engine.schedule != schedule)

@@ -108,6 +108,15 @@ class RunReport:
     process_index: int = 0
     owned_jobs: tuple | None = None
     owned_sites: tuple | None = None
+    # collective/shipment ledger (ExecutionBackend.ledger): how many
+    # result-shipment collectives the backend performed this run, the
+    # underlying allgather rounds they cost, and how many job results
+    # arrived shipped from other processes.  Wave-fused shipping makes
+    # shipments scale with ready WAVES; the per-job mode scales with
+    # jobs — the paper's communication-round count, made measurable.
+    shipments: int = 0
+    collective_rounds: int = 0
+    shipped_results: int = 0
 
     @property
     def critical_path_s(self) -> float:
@@ -238,6 +247,11 @@ class Engine:
             self._run_async(dag, results, rep, done, policy)
         else:
             self._run_staged(dag, results, rep, done, policy)
+        led = self._backend.ledger()
+        if led is not None:
+            rep.shipments = int(led.get("shipments", 0))
+            rep.collective_rounds = int(led.get("collective_rounds", 0))
+            rep.shipped_results = int(led.get("shipped_results", 0))
         return rep
 
     # -- matchmaking ----------------------------------------------------------

@@ -48,6 +48,40 @@ from repro.workflow.dag import DAG, Job, TimedResult
 BACKENDS = ("inline", "batched", "multihost")
 
 
+def ready_wave(dag: DAG, results: dict, skip=()) -> list[Job]:
+    """The ready wave as a backend sees it mid-run: every job that has
+    not yet executed (``status != "done"`` and not already pre-executed
+    into ``skip``) whose dependency results are ALL available.
+
+    This is the wave-grouping hook shared by the dispatch-fusing
+    backends: because both engine schedulers invoke ``call`` in an order
+    that is deterministic on (dag, model, seeds, measured times), every
+    process of a distributed run computes the identical wave at the
+    identical ``call`` — which is what lets the multihost backend ship a
+    whole wave in one collective.  Insertion (scheduler) order.
+    """
+    return [
+        j
+        for j in dag.jobs.values()
+        if j.status != "done"
+        and j.name not in skip
+        and all(d in results for d in j.deps)
+    ]
+
+
+def group_wave(wave: list[Job]) -> list[list[Job]]:
+    """Split a ready wave into fused-dispatch groups: jobs sharing a
+    ``batch_key`` (with a ``batched_fn``) form one group — ONE vmapped
+    dispatch covers them — and every other job is its own singleton
+    group.  Group order follows each group's first member (insertion
+    order), so grouping is deterministic everywhere."""
+    groups: dict[Any, list[Job]] = {}
+    for j in wave:
+        key = ("batch", j.batch_key) if j.batch_key is not None and j.batched_fn is not None else ("solo", j.name)
+        groups.setdefault(key, []).append(j)
+    return list(groups.values())
+
+
 @dataclass(frozen=True)
 class Partition:
     """How a distributed backend splits one DAG over its processes.
@@ -91,6 +125,15 @@ class ExecutionBackend:
         return None
 
     def partition(self, dag: DAG, model=None) -> Partition | None:
+        return None
+
+    def ledger(self) -> dict | None:
+        """Per-run collective/shipment ledger (distributed backends):
+        ``{"shipments", "collective_rounds", "shipped_results"}`` counts
+        accumulated since ``begin_run``.  The engine copies a non-None
+        ledger onto ``RunReport`` so the O(jobs) -> O(waves) collective
+        reduction is measurable per run, not asserted by hand.  Local
+        backends return None (no collectives to count)."""
         return None
 
     def call(self, job: Job, args: list) -> Any:
@@ -151,18 +194,15 @@ class BatchedBackend(ExecutionBackend):
 
     def _peers(self, job: Job) -> list[Job]:
         """The co-batchable group: same batch_key, not yet executed, all
-        dependency results available.  Scheduler (insertion) order —
-        deterministic."""
+        dependency results available — i.e. this job's group within the
+        current ready wave (``ready_wave``/``group_wave``).  Scheduler
+        (insertion) order — deterministic."""
         assert self._dag is not None and self._results is not None
-        out = []
-        for j in self._dag.jobs.values():
-            if j.batch_key != job.batch_key or j.batched_fn is None:
-                continue
-            if j.name != job.name and (j.status == "done" or j.name in self._cache):
-                continue
-            if all(d in self._results for d in j.deps):
-                out.append(j)
-        return out
+        wave = ready_wave(self._dag, self._results, skip=self._cache)
+        for group in group_wave(wave):
+            if any(j.name == job.name for j in group):
+                return group
+        return [job]  # pragma: no cover - the requested job is always in the wave
 
     def call(self, job: Job, args: list) -> Any:
         if job.name in self._cache:
@@ -214,5 +254,7 @@ __all__ = [
     "InlineBackend",
     "Partition",
     "TimedResult",
+    "group_wave",
+    "ready_wave",
     "resolve_backend",
 ]

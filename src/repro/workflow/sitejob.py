@@ -155,8 +155,20 @@ def merge_owner_times(
     it is actually this process's own (``owned``; stale entries for jobs
     owned elsewhere — the redundant-execution hazard — are overwritten
     with the authoritative shipped times).
+
+    An ``owned`` entry naming a job the ledger has never heard of is a
+    caller bug (a stale partition, a typo'd name) that would otherwise
+    pass silently — so it raises, naming the stray entries.
     """
     owned_set = set(owned) if owned is not None else None
+    if owned_set is not None:
+        stray = sorted(str(n) for n in owned_set - set(job_times))
+        if stray:
+            raise ValueError(
+                f"merge_owner_times: {len(stray)} owned job name(s) not in the "
+                f"job_times ledger: {', '.join(stray[:5])}"
+                + ("..." if len(stray) > 5 else "")
+            )
     out = dict(measured)
     for name, dt in job_times.items():
         if name not in out or (owned_set is not None and name not in owned_set):

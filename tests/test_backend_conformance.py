@@ -28,9 +28,19 @@ from repro.runtime.conformance import APPS, MARKER, SCHEDULES
 
 SRC = str(Path(__file__).resolve().parent.parent / "src")
 
-# (n_processes, n_sites): sites deliberately do NOT divide evenly over
-# the processes, so the ownership map must handle ragged partitions
-GROUPS = {"2p": (2, 3), "3p": (3, 4)}
+# (n_processes, n_sites, fuse): sites deliberately do NOT divide evenly
+# over the processes, so the ownership map must handle ragged partitions.
+# The plain groups pin the per-job shipment mode (--fuse 0, one collective
+# per executed job); the *_batched groups run the wave-fused default
+# (--fuse 1, one collective per ready wave) — digests must be bit-for-bit
+# identical across ALL of them.  CI note: pytest -k matches substrings, so
+# the matrix selects with expressions like "(2p and not batched)".
+GROUPS = {
+    "2p": (2, 3, 0),
+    "3p": (3, 4, 0),
+    "2p_batched": (2, 3, 1),
+    "3p_batched": (3, 4, 1),
+}
 CELLS = [(app, sched) for app in APPS for sched in SCHEDULES]
 
 # init failures that mean "this environment cannot run jax.distributed",
@@ -51,7 +61,7 @@ def _free_port() -> int:
         return s.getsockname()[1]
 
 
-def _launch_group(nprocs: int, n_sites: int) -> dict:
+def _launch_group(nprocs: int, n_sites: int, fuse: int = 1) -> dict:
     port = _free_port()
     env = dict(os.environ)
     env["JAX_PLATFORMS"] = "cpu"
@@ -66,6 +76,7 @@ def _launch_group(nprocs: int, n_sites: int) -> dict:
                 "--nprocs", str(nprocs),
                 "--port", str(port),
                 "--sites", str(n_sites),
+                "--fuse", str(fuse),
             ],
             stdout=subprocess.PIPE,
             stderr=subprocess.PIPE,
@@ -105,8 +116,8 @@ _group_cache: dict = {}
 
 def _group(name: str) -> dict:
     if name not in _group_cache:
-        nprocs, n_sites = GROUPS[name]
-        _group_cache[name] = _launch_group(nprocs, n_sites)
+        nprocs, n_sites, fuse = GROUPS[name]
+        _group_cache[name] = _launch_group(nprocs, n_sites, fuse)
         _write_artifact()
     g = _group_cache[name]
     if "error" in g:
@@ -151,7 +162,7 @@ def _inline_reference(app: str, n_sites: int, schedule: str, backend="inline") -
 def test_batched_matches_inline(app, schedule):
     """batched must agree with inline on digests AND fingerprints for
     every app × schedule (at the conformance harness's site counts)."""
-    for n_sites in {ns for _, ns in GROUPS.values()}:
+    for n_sites in {g[1] for g in GROUPS.values()}:
         ref = _inline_reference(app, n_sites, schedule)
         got = _inline_reference(app, n_sites, schedule, backend="batched")
         assert got["digest"] == ref["digest"]
@@ -164,7 +175,7 @@ def test_multihost_single_process_matches_inline(app):
     inline execution — same digests, same fingerprints, no partition."""
     from repro.runtime.backends import MultiHostBackend
 
-    nprocs, n_sites = GROUPS["2p"]
+    nprocs, n_sites, _fuse = GROUPS["2p"]
     be = MultiHostBackend()
     ref = _inline_reference(app, n_sites, "staged")
     run = conformance.run_app(app, n_sites, "staged", be)
@@ -259,6 +270,32 @@ def test_fault_injection_under_distribution(group):
         assert fc["retries_mh"] == fc["retries_inline"] == 1
         assert fc["digest_mh"] == fc["digest_inline"]
         assert fc["n_processes"] == g["nprocs"]
+
+
+@pytest.mark.parametrize("group", sorted(GROUPS))
+def test_shipment_ledger(group):
+    """The collective-count ledger: wave-fused groups ship once per ready
+    WAVE (strictly fewer collectives than jobs on these fan-out DAGs);
+    per-job groups ship once per job — the O(jobs) -> O(waves) reduction,
+    measured on the real distributed runs."""
+    g = _group(group)
+    fused = bool(GROUPS[group][2])
+    for report in g["reports"]:
+        assert report["fuse_waves"] is fused
+        for cell in report["cells"]:
+            mh = cell["multihost"]
+            led = mh["ledger"]
+            n_jobs = len(mh["job_sites"])
+            # allgather_bytes = two process_allgather rounds per shipment
+            assert led["collective_rounds"] == 2 * led["shipments"]
+            # every non-owned job's result arrived through a shipment
+            assert led["shipped_results"] == len(mh["shipped"])
+            if fused:
+                assert led["shipments"] == led["waves"]
+                assert led["shipments"] < n_jobs
+            else:
+                assert led["waves"] == 0
+                assert led["shipments"] == n_jobs
 
 
 @pytest.mark.parametrize("group", sorted(GROUPS))

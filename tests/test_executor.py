@@ -345,6 +345,14 @@ class TestOwnerOnlyTiming:
         out = merge_owner_times({"a": 1.0}, {"a": 5.0, "b": 2.0}, owned=None)
         assert out == {"a": 1.0, "b": 2.0}
 
+    def test_merge_owner_times_rejects_stray_owned_names(self):
+        # an owned name the ledger has never heard of is a caller bug (a
+        # stale partition, a typo) — it must raise, naming the strays
+        with pytest.raises(ValueError, match="ghost"):
+            merge_owner_times({"a": 1.0}, {"a": 1.0, "b": 2.0}, owned=("a", "ghost"))
+        with pytest.raises(ValueError, match="2 owned job name"):
+            merge_owner_times({}, {"a": 1.0}, owned=("x", "y"))
+
     def test_timed_batch_owned_filter_records_owner_only(self):
         record = {}
         bf = timed_batch(

@@ -18,10 +18,13 @@ NEVER lose or duplicate a job's committed result —
 
 Inline paths were already property-tested (test_scheduler_invariants,
 test_workflow); these pin the same guarantees onto the dispatch-fusing
-and ownership/shipping backends.  The multihost cells here run the
-single-process fallback in-process (same ``call`` path, partition-free);
-the true multi-process fault cell lives in the subprocess conformance
-harness (tests/test_backend_conformance.py::test_fault_injection_under_distribution).
+and ownership/shipping backends.  The multihost cells here run in three
+in-process modes: partition-free single-process fallback ("multihost"),
+force-partitioned wave-fused shipping ("multihost_fused" — the fused-
+over-mesh default path, with the collectives degenerating to identity)
+and force-partitioned per-job shipping ("multihost_perjob"); the true
+multi-process fault cell lives in the subprocess conformance harness
+(tests/test_backend_conformance.py::test_fault_injection_under_distribution).
 """
 
 import random
@@ -94,8 +97,17 @@ def fault_map(seed: int, n_leaves: int) -> dict[str, int]:
     return {n: rng.randint(1, 2) for n in names if rng.random() < 0.4}
 
 
+KINDS = ["batched", "multihost", "multihost_fused", "multihost_perjob"]
+
+
 def _backend(kind: str):
-    return BatchedBackend() if kind == "batched" else MultiHostBackend()
+    if kind == "batched":
+        return BatchedBackend()
+    if kind == "multihost_fused":
+        return MultiHostBackend(force_partition=True)
+    if kind == "multihost_perjob":
+        return MultiHostBackend(force_partition=True, fuse_waves=False)
+    return MultiHostBackend()
 
 
 @settings(max_examples=25, deadline=None)
@@ -103,7 +115,7 @@ def _backend(kind: str):
     seed=st.integers(min_value=0, max_value=10_000),
     n_leaves=st.integers(min_value=1, max_value=6),
     schedule=st.sampled_from(SCHEDULES),
-    kind=st.sampled_from(["batched", "multihost"]),
+    kind=st.sampled_from(KINDS),
 )
 def test_faults_never_lose_or_duplicate_results(seed, n_leaves, schedule, kind):
     counts: dict[str, int] = {}
@@ -132,11 +144,12 @@ def test_faults_never_lose_or_duplicate_results(seed, n_leaves, schedule, kind):
 @settings(max_examples=10, deadline=None)
 @given(
     seed=st.integers(min_value=0, max_value=10_000),
-    kind=st.sampled_from(["batched", "multihost"]),
+    kind=st.sampled_from(KINDS),
 )
 def test_batched_cache_consumed_exactly_once(seed, kind):
-    """After any faulty run the batched backend's fuse cache is empty:
-    every pre-executed peer result was handed out exactly once."""
+    """After any faulty run the batched backend's fuse cache (and the
+    multihost backend's wave cache) is empty: every pre-executed peer
+    result was handed out exactly once."""
     counts: dict[str, int] = {}
     dag = fanout_dag(5, counts)
     be = _backend(kind)
@@ -150,13 +163,15 @@ def test_batched_cache_consumed_exactly_once(seed, kind):
     assert counts == {name: 1 for name in dag.jobs}
     if isinstance(be, BatchedBackend):
         assert be._cache == {}
+    if isinstance(be, MultiHostBackend):
+        assert be._wave_cache == {}
 
 
 @settings(max_examples=10, deadline=None)
 @given(
     seed=st.integers(min_value=0, max_value=10_000),
     schedule=st.sampled_from(SCHEDULES),
-    kind=st.sampled_from(["batched", "multihost"]),
+    kind=st.sampled_from(KINDS),
 )
 def test_rescue_resumes_without_reexecution(seed, schedule, kind):
     """Exhausting the collector's retries crashes the run AFTER the leaf
@@ -203,7 +218,7 @@ def test_rescue_resumes_without_reexecution(seed, schedule, kind):
 @settings(max_examples=8, deadline=None)
 @given(
     seed=st.integers(min_value=0, max_value=10_000),
-    kind=st.sampled_from(["batched", "multihost"]),
+    kind=st.sampled_from(KINDS),
     schedule=st.sampled_from(SCHEDULES),
 )
 def test_speculation_never_duplicates_execution(seed, kind, schedule):
@@ -228,6 +243,86 @@ def test_speculation_never_duplicates_execution(seed, kind, schedule):
     assert results["collect"] == sum(10 * i for i in range(5))
     assert counts == {name: 1 for name in dag.jobs}
     assert rep.speculative >= 1
+
+
+def test_wave_ledger_counts_waves_not_jobs():
+    """The collective-count ledger on a wide fan-out DAG: wave-fused
+    shipping performs exactly one shipment per READY WAVE (here 2: the
+    leaf fan-out, then the collector), while per-job mode ships once per
+    job — the O(jobs) -> O(waves) reduction, surfaced on RunReport."""
+    n = 8
+    counts: dict[str, int] = {}
+    dag = fanout_dag(n, counts)
+    be = _backend("multihost_fused")
+    results: dict = {}
+    rep = Engine(model=_model(), backend=be).run(dag, results=results)
+    assert results["collect"] == sum(10 * i for i in range(n))
+    assert be.waves == 2
+    assert rep.shipments == be.shipments == 2
+    assert rep.collective_rounds == 4  # two process_allgather rounds each
+    assert rep.shipped_results == 0  # one process owns every site
+    # per-job mode on the identical DAG: one shipment per job
+    counts2: dict[str, int] = {}
+    dag2 = fanout_dag(n, counts2)
+    be2 = _backend("multihost_perjob")
+    rep2 = Engine(model=_model(), backend=be2).run(dag2, results={})
+    assert be2.waves == 0
+    assert rep2.shipments == n + 1
+    assert rep2.collective_rounds == 2 * (n + 1)
+
+
+def test_wave_ledger_resets_per_run():
+    """begin_run zeroes the ledger: RunReport counts are per-run, not
+    cumulative across an engine's lifetime."""
+    be = _backend("multihost_fused")
+    eng = Engine(model=_model(), backend=be)
+    for _ in range(2):
+        counts: dict[str, int] = {}
+        rep = eng.run(fanout_dag(4, counts), results={})
+        assert rep.shipments == be.shipments == 2
+
+
+def test_wave_faults_consume_cache_not_collectives():
+    """Injected faults retry against the wave cache: the shipment count
+    stays at the wave count no matter how many retries fire (a retry must
+    never trigger a fresh collective, or the processes of a real group
+    would desynchronize)."""
+    counts: dict[str, int] = {}
+    dag = fanout_dag(6, counts)
+    be = _backend("multihost_fused")
+    rep = Engine(
+        model=_model(),
+        faults=FaultInjector(fail={"leaf_1": 2, "leaf_4": 1, "collect": 2}),
+        backend=be,
+    ).run(dag, results={})
+    assert rep.retries == 5
+    assert rep.shipments == 2
+    assert counts == {name: 1 for name in dag.jobs}
+
+
+def test_wave_ships_owner_failure_as_shared_error():
+    """A real exception inside an owned job's callable ships with the
+    wave and raises AFTER the collective, naming the owning process — the
+    contract that keeps the peers out of a stranded allgather."""
+    dag = DAG("boom")
+
+    def bad():
+        raise ValueError("boom")
+
+    dag.job("a", bad, retries=0)
+    be = _backend("multihost_fused")
+    with pytest.raises(RuntimeError, match="failed on its owning process"):
+        Engine(model=_model(), backend=be).run(dag, results={})
+
+
+def test_inline_backend_reports_no_ledger():
+    """Local backends expose no collective ledger; RunReport keeps the
+    zero defaults."""
+    counts: dict[str, int] = {}
+    rep = Engine(model=_model(), backend=BatchedBackend()).run(
+        fanout_dag(4, counts), results={}
+    )
+    assert (rep.shipments, rep.collective_rounds, rep.shipped_results) == (0, 0, 0)
 
 
 def test_rescue_skips_batched_fuse_for_done_jobs():
