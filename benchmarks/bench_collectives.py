@@ -50,8 +50,17 @@ def run(n_sites: int = 8, out: str | None = None) -> dict:
                 f"{cell['reduction_pct']:.0f}"
             )
     if out:
-        with open(out, "w") as fh:
-            json.dump(report, fh, indent=2, sort_keys=True)
+        try:
+            with open(out, "w") as fh:
+                json.dump(report, fh, indent=2, sort_keys=True)
+        except FileNotFoundError:
+            # name the missing directory and the fix instead of a bare
+            # traceback — CI passes a relative path from the repo root
+            raise SystemExit(
+                f"bench_collectives: cannot write {out!r} — its directory does "
+                f"not exist; create it (mkdir -p) or pass --out with an "
+                f"existing directory"
+            ) from None
         print(f"# wrote {out}")
     return report
 

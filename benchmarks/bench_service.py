@@ -1,0 +1,145 @@
+"""Service-level throughput/latency bench: a bursty multi-tenant arrival
+trace through the continuous mining service (``repro.launch.serve``).
+
+Where the sweep benches measure ONE application's DAG, this measures the
+serving layer itself: request throughput, tenant-visible latency
+percentiles (admission to completion, queue wait included), the
+versioned cache's hit rate across bursts and data appends, how many
+identical concurrent requests coalesced into shared executions, and the
+round-robin fairness bound over the pick log.  The trace is the same
+seeded burst generator the service CLI drives (shared query per burst ->
+coalescing; small param pool -> repeats within a dataset version ->
+cache hits; periodic appends -> version bumps -> honest misses).
+
+    PYTHONPATH=src python -m benchmarks.bench_service --smoke --out BENCH_service.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from types import SimpleNamespace
+
+import numpy as np
+
+from repro.launch.serve import _build_service, _trace_bursts, fairness_violations
+from repro.workflow.requests import QueueFullError
+
+
+def run(
+    backend: str = "batched",
+    requests: int = 50,
+    tenants: int = 3,
+    burst: int = 4,
+    n_sites: int = 4,
+    n_items: int = 12,
+    append_every: int = 2,
+    max_per_step: int = 8,
+    seed: int = 0,
+    out: str | None = None,
+) -> dict:
+    args = SimpleNamespace(
+        backend=backend, requests=requests, tenants=tenants, burst=burst,
+        n_sites=n_sites, n_items=n_items, seed=seed, max_depth=256,
+    )
+    rng = np.random.default_rng(seed)
+    svc = _build_service(args)
+    tenant_names = [f"tenant{i}" for i in range(tenants)]
+    bursts = _trace_bursts(args, rng)
+
+    from repro.data.synthetic import gaussian_mixture, ibm_transactions
+
+    rejected = 0
+    t0 = time.perf_counter()
+    for b, burst_reqs in enumerate(bursts):
+        for tenant, app, dataset, params in burst_reqs:
+            try:
+                svc.submit(tenant, app, dataset, params)
+            except QueueFullError:
+                rejected += 1
+        svc.drain(max_requests=max_per_step)
+        if append_every and (b + 1) % append_every == 0:
+            svc.append_transactions("tx", ibm_transactions(seed + b + 1, 60, n_items))
+            pts, _ = gaussian_mixture(seed + b + 1, 60, 2, 3)
+            svc.append_points("pts", pts)
+    wall = time.perf_counter() - t0
+
+    led = svc.ledger()
+    done = [r for r in led["requests"] if r["status"] == "done"]
+    lat = np.array([r["service_s"] for r in done]) if done else np.zeros(1)
+    waits = np.array([r["queue_wait_s"] for r in done]) if done else np.zeros(1)
+    fairness_ok = not fairness_violations(
+        svc.pick_log, tenant_names, len(tenant_names) * min(
+            sum(1 for r in led["requests"] if r["tenant"] == t) for t in tenant_names))
+
+    report = {
+        "backend": led["backend"],
+        "n_sites": n_sites,
+        "tenants": tenants,
+        "requests": len(led["requests"]),
+        "done": len(done),
+        "failed": sum(1 for r in led["requests"] if r["status"] == "failed"),
+        "rejected": led["rejected"] + rejected,
+        "wall_s": wall,
+        "throughput_rps": len(done) / max(wall, 1e-9),
+        "latency_ms": {
+            "p50": float(np.percentile(lat, 50) * 1e3),
+            "p90": float(np.percentile(lat, 90) * 1e3),
+            "p95": float(np.percentile(lat, 95) * 1e3),
+            "max": float(lat.max() * 1e3),
+        },
+        "queue_wait_ms_mean": float(waits.mean() * 1e3),
+        "cache": led["cache"],
+        "executions": led["executions"],
+        "coalesced": led["coalesced"],
+        "fairness_ok": bool(fairness_ok),
+        "per_tenant": led["per_tenant"],
+    }
+
+    print(f"# mining service, {tenants} tenants x bursty trace, backend={report['backend']}")
+    print("requests,done,throughput_rps,p50_ms,p95_ms,hit_rate,coalesced,fair")
+    print(
+        f"{report['requests']},{report['done']},{report['throughput_rps']:.2f},"
+        f"{report['latency_ms']['p50']:.0f},{report['latency_ms']['p95']:.0f},"
+        f"{report['cache']['hit_rate']:.2f},{report['coalesced']},"
+        f"{'yes' if fairness_ok else 'NO'}"
+    )
+    if out:
+        with open(out, "w") as fh:
+            json.dump(report, fh, indent=2, sort_keys=True, default=float)
+        print(f"# wrote {out}")
+    return report
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--backend", default="batched", choices=("inline", "batched", "multihost"))
+    ap.add_argument("--requests", type=int, default=50)
+    ap.add_argument("--tenants", type=int, default=3)
+    ap.add_argument("--burst", type=int, default=4)
+    ap.add_argument("--n-sites", type=int, default=4)
+    ap.add_argument("--n-items", type=int, default=12)
+    ap.add_argument("--append-every", type=int, default=2)
+    ap.add_argument("--max-per-step", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small trace for CI (fewer requests, tiny data)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    kw = dict(
+        backend=args.backend, requests=args.requests, tenants=args.tenants,
+        burst=args.burst, n_sites=args.n_sites, n_items=args.n_items,
+        append_every=args.append_every, max_per_step=args.max_per_step,
+        seed=args.seed, out=args.out,
+    )
+    if args.smoke:
+        # one dataset version across the whole trace (append_every=3 >
+        # burst count) so the repeated param pool demonstrably hits
+        kw.update(requests=18, n_sites=2, n_items=10, burst=3, append_every=3)
+    run(**kw)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

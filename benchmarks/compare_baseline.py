@@ -219,6 +219,33 @@ def compare_kernels(
     return failures, notes
 
 
+# how to (re)produce each input file this gate consumes — used to turn a
+# bare FileNotFoundError into an actionable message
+REGEN = {
+    "baseline": "PYTHONPATH=src python -m benchmarks.bench_sweep --smoke --out {path}",
+    "candidate": "PYTHONPATH=src python -m benchmarks.bench_sweep --smoke --out {path}",
+    "kernels baseline": "PYTHONPATH=src python -m benchmarks.bench_kernels --out {path}",
+    "kernels candidate": "PYTHONPATH=src python -m benchmarks.bench_kernels --out {path}",
+}
+
+
+def _load(path: str, role: str) -> dict:
+    """Load one JSON input, or exit with the file's name and the command
+    that regenerates it (instead of a bare traceback)."""
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except FileNotFoundError:
+        cmd = REGEN[role].format(path=path)
+        sys.exit(
+            f"compare_baseline: {role} file {path!r} not found.\n"
+            f"  Regenerate it with:\n    {cmd}\n"
+            f"  (committed baselines are refreshed intentionally — see the module docstring)"
+        )
+    except json.JSONDecodeError as e:
+        sys.exit(f"compare_baseline: {role} file {path!r} is not valid JSON ({e})")
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--baseline", default="BENCH_baseline.json")
@@ -233,10 +260,8 @@ def main() -> int:
     ap.add_argument("--tol-kernels", type=float, default=1.0)
     args = ap.parse_args()
 
-    with open(args.baseline) as f:
-        baseline = json.load(f)
-    with open(args.candidate) as f:
-        candidate = json.load(f)
+    baseline = _load(args.baseline, "baseline")
+    candidate = _load(args.candidate, "candidate")
 
     failures, notes = compare(
         baseline,
@@ -247,10 +272,8 @@ def main() -> int:
     )
     n_kernels = 0
     if args.kernels_baseline and args.kernels_candidate:
-        with open(args.kernels_baseline) as f:
-            kb = json.load(f)
-        with open(args.kernels_candidate) as f:
-            kc = json.load(f)
+        kb = _load(args.kernels_baseline, "kernels baseline")
+        kc = _load(args.kernels_candidate, "kernels candidate")
         kfail, knotes = compare_kernels(kb, kc, tol_kernels=args.tol_kernels)
         failures.extend(kfail)
         notes.extend(knotes)

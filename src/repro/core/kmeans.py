@@ -105,6 +105,50 @@ def kmeans(
     return KMeansResult(centers=stats.centers, assign=assign, inertia=jnp.sum(mind2), stats=stats)
 
 
+@functools.partial(jax.jit, static_argnames=("iters", "use_kernel"))
+def kmeans_warm(
+    x: jax.Array,
+    centers0: jax.Array,
+    iters: int = 25,
+    use_kernel: bool = False,
+) -> KMeansResult:
+    """Lloyd's algorithm warm-started from explicit initial centers —
+    the serving layer's incremental-clustering entry point: on drifting
+    data the previous query's centroids are a near-converged seed, so a
+    handful of refinement iterations replace a full seeded run.
+
+    Exactly the ``kmeans`` iteration (same empty-cluster repair, same
+    statistics), minus the seeding: ``kmeans_warm(x, prev.centers,
+    iters=n)`` continues where the previous fit stopped, and on identical
+    data reproduces ``kmeans``'s fixed point (idempotent once converged).
+    """
+    n, d = x.shape
+    x = x.astype(jnp.float32)
+    centers = jnp.asarray(centers0, jnp.float32)
+    k = centers.shape[0]
+
+    def step(carry, _):
+        centers = carry
+        assign, mind2 = _assign(x, centers, use_kernel)
+        sizes = jax.ops.segment_sum(jnp.ones((n,), jnp.float32), assign, num_segments=k)
+        sums = jax.ops.segment_sum(x, assign, num_segments=k)
+        new_centers = sums / jnp.maximum(sizes, 1.0)[:, None]
+        new_centers = jnp.where((sizes > 0)[:, None], new_centers, centers)
+        far = jnp.argmax(mind2)
+        empty = sizes == 0
+        new_centers = jnp.where(
+            jnp.any(empty),
+            new_centers.at[jnp.argmax(empty)].set(x[far]),
+            new_centers,
+        )
+        return new_centers, None
+
+    centers, _ = jax.lax.scan(step, centers, None, length=iters)
+    assign, mind2 = _assign(x, centers, use_kernel)
+    stats = stats_from_assignment(x, assign, k)
+    return KMeansResult(centers=stats.centers, assign=assign, inertia=jnp.sum(mind2), stats=stats)
+
+
 def _pooled_inertia(key, x, k, iters):
     return kmeans(key, x, k, iters=iters).inertia
 

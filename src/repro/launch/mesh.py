@@ -1,8 +1,32 @@
-"""Production mesh construction.
+"""Device-mesh construction and multi-process bring-up for the grid
+runtime — the hardware seam everything above ``repro.core`` stands on.
 
-Kept as FUNCTIONS (never module-level constants) so importing this module
-never touches jax device state — the dry-run must set
-XLA_FLAGS=--xla_force_host_platform_device_count BEFORE first jax init.
+What lives here, bottom-up:
+
+  * :func:`make_site_mesh` — the 1-D grid-site mesh (one device per paper
+    "site") the single-host runtime's shard_map synchronization runs on;
+    returns None when the host has too few devices and callers fall back
+    to the bit-identical pooled path.
+  * :func:`init_multihost` / :func:`make_multihost_mesh` — bring up
+    ``jax.distributed`` (gloo CPU collectives selected BEFORE backend
+    init; idempotent) and build the same site mesh over the GLOBAL
+    device set, so the identical SiteJob DAGs distribute across hosts.
+  * :func:`site_ownership` — the deterministic ``site -> process`` map
+    (capacity-proportional greedy) that gives every grid site exactly
+    one executing process under ``runtime.backends.MultiHostBackend``.
+  * :func:`allgather_bytes` / :func:`allgather_payload` — the shipment
+    wire: variable-length bytes (then packed pytrees) gathered across
+    processes; the ONLY cross-process traffic the multihost backend
+    performs, wave-fused so collectives scale with ready waves.
+  * :func:`make_production_mesh` / :func:`make_variant_mesh` /
+    :func:`make_test_mesh`, and the ``HW`` roofline constants — the
+    scale-out/dry-run harness meshes (16x16-pod shapes) used by the
+    roofline table and capacity notes, not by the mining runtime.
+
+Everything is kept as FUNCTIONS (never module-level constants) so
+importing this module never touches jax device state — the dry-run must
+set XLA_FLAGS=--xla_force_host_platform_device_count BEFORE first jax
+init, and ``init_multihost`` must run before the first backend query.
 """
 
 from __future__ import annotations

@@ -1,72 +1,595 @@
-"""Serving entry: prefill + batched greedy decode loop.
+"""Continuous mining service — a long-lived, multi-tenant serving layer
+over the grid runtime.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch gemma2-2b --reduced \
-        --prompt-len 24 --gen 16 --batch 2
+Everything below ``launch`` runs ONE application's DAG and reports; real
+grid load ("Mining the Workload of Real Grid Computing Systems",
+arXiv:1412.2673) is a bursty stream of arrivals from many users.
+:class:`MiningService` closes that gap in-process (no network):
+
+  * **submit/poll/result** — tenants submit mining requests (app +
+    dataset + params) and poll for completion; admission control rejects
+    into bounded per-tenant queues (``workflow.requests.TenantQueues``),
+    and a deterministic weighted round-robin picker keeps tenants fair.
+  * **incremental per-dataset state** — appended transaction batches
+    fold into a ``core.apriori.DeltaApriori`` (queries are bit-identical
+    to from-scratch Apriori over the concatenation, at O(|delta|) device
+    cost per append); k-means queries warm-start from the previous
+    version's centroids (``core.kmeans.kmeans_warm``) on drifting data.
+  * **coalescing + batched dispatch** — concurrent identical requests
+    (same dataset version, app, canonical params) become ONE execution,
+    and every execution runs through the engine's execution backends
+    (``batched`` by default: shape-identical fan-out jobs fuse into one
+    vmapped dispatch; ``multihost`` partitions sites across processes).
+  * **versioned result cache** — completed results are cached under
+    ``(dataset, dataset_version, app, params)``
+    (``runtime.cache.ResultCache``); any append bumps the version, so a
+    stale result is unreachable by key construction.
+  * **ledger** — per-request and per-tenant records (queue wait, compute
+    share, cache hit, backend used) in the same spirit as the engine's
+    ``RunReport``, JSON-serializable for the CI smoke's artifact.
+
+CLI driver (bursty synthetic multi-tenant trace; ``--check`` gates the
+fairness bound, cache hits and coalescing for CI)::
+
+    PYTHONPATH=src python -m repro.launch.serve --requests 50 --tenants 3 \
+        --backend batched --check --ledger-out service_ledger.json
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import math
+import sys
 import time
+from dataclasses import dataclass, field
+from typing import Any
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-import repro.configs as configs
-from repro.models import transformer as T
-from repro.models.config import reduced as reduce_cfg
-from repro.sharding import ShapeAxes
+from repro.core.apriori import DeltaApriori, TransactionDB
+from repro.core.kmeans import kmeans, kmeans_warm
+from repro.core.vclustering import VClusterConfig
+from repro.data.synthetic import (
+    gaussian_mixture,
+    ibm_transactions,
+    split_sites,
+    split_transactions,
+)
+from repro.runtime.cache import ResultCache, params_key
+from repro.runtime.gridruntime import GridRuntime
+from repro.workflow.requests import (
+    MiningRequest,
+    QueueFullError,
+    TenantQueues,
+    coalesce,
+    request_ids,
+)
+from repro.workflow.sitejob import SiteJob, timed
+
+APPS = ("apriori", "gfm", "fdm", "kmeans", "vclustering")
+_TX_APPS = ("apriori", "gfm", "fdm")
+_PT_APPS = ("kmeans", "vclustering")
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="gemma2-2b", choices=configs.ARCHS)
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--prompt-len", type=int, default=24)
-    ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--batch", type=int, default=2)
+@dataclass
+class _Dataset:
+    """Per-dataset incremental state the service maintains across appends."""
+
+    name: str
+    kind: str  # "transactions" | "points"
+    version: int = 0
+    # transactions: the appended dense batches plus the delta-Apriori state
+    n_items: int | None = None
+    delta: DeltaApriori | None = None
+    tx_batches: list = field(default_factory=list)
+    # points: appended (n, dim) batches plus per-k warm-start centroids
+    dim: int | None = None
+    pt_batches: list = field(default_factory=list)
+    warm_centers: dict = field(default_factory=dict)  # k -> np.ndarray (k, dim)
+
+    def pooled_points(self) -> np.ndarray:
+        return np.concatenate(self.pt_batches, axis=0)
+
+    def pooled_dense(self) -> np.ndarray:
+        return np.concatenate(self.tx_batches, axis=0)
+
+
+class MiningService:
+    """In-process multi-tenant mining service over :class:`GridRuntime`.
+
+    One instance owns the datasets, the tenant queues, the result cache
+    and the runtime; :meth:`step` is the scheduler tick — a fair pick of
+    queued requests, coalesced by execution key, served from cache or
+    executed through the engine's execution backend.
+    """
+
+    def __init__(
+        self,
+        runtime: GridRuntime | None = None,
+        backend: str = "batched",
+        n_sites: int = 4,
+        max_depth: int = 64,
+        weights: dict[str, float] | None = None,
+        cache_capacity: int | None = 256,
+        count_backend: str = "jnp",
+        use_kernel: bool = False,
+        clock=time.monotonic,
+    ):
+        if runtime is None:
+            runtime = GridRuntime(
+                backend=backend,
+                sync="pooled",
+                use_kernel=use_kernel,
+                count_backend=count_backend,
+            )
+        self.runtime = runtime
+        self.backend_name = runtime.engine.backend.name
+        self.n_sites = int(n_sites)
+        self.use_kernel = use_kernel
+        self.count_backend = count_backend
+        self.queues = TenantQueues(max_depth=max_depth, weights=weights)
+        self.cache = ResultCache(cache_capacity)
+        self._ids = request_ids()
+        self._requests: dict[int, MiningRequest] = {}
+        self._results: dict[int, Any] = {}
+        self._datasets: dict[str, _Dataset] = {}
+        self._clock = clock
+        self.executions = 0  # backend runs actually dispatched
+        self.coalesced = 0  # requests served by another request's run
+        # tenant pick order, for the fairness audit (CI gates a prefix
+        # bound on this while every tenant stays backlogged)
+        self.pick_log: list[str] = []
+
+    # -- datasets -------------------------------------------------------------
+
+    def register_dataset(
+        self, name: str, kind: str = "transactions", *, n_items: int | None = None,
+        dim: int | None = None,
+    ) -> None:
+        if kind not in ("transactions", "points"):
+            raise ValueError(f"unknown dataset kind {kind!r}")
+        if name in self._datasets:
+            raise ValueError(f"dataset {name!r} already registered")
+        if kind == "transactions":
+            if n_items is None:
+                raise ValueError("transactions dataset needs n_items")
+            ds = _Dataset(name=name, kind=kind, n_items=int(n_items),
+                          delta=DeltaApriori(int(n_items), backend=self.count_backend))
+        else:
+            if dim is None:
+                raise ValueError("points dataset needs dim")
+            ds = _Dataset(name=name, kind=kind, dim=int(dim))
+        self._datasets[name] = ds
+
+    def _dataset(self, name: str) -> _Dataset:
+        try:
+            return self._datasets[name]
+        except KeyError:
+            raise KeyError(f"unknown dataset {name!r}; register_dataset first") from None
+
+    def append_transactions(self, name: str, dense_batch: np.ndarray) -> int:
+        """Append one dense bool (n_tx, n_items) batch; folds into the
+        delta-Apriori state and bumps ``version``.  Returns the version."""
+        ds = self._dataset(name)
+        if ds.kind != "transactions":
+            raise ValueError(f"dataset {name!r} holds points, not transactions")
+        dense = np.asarray(dense_batch, dtype=bool)
+        ds.delta.append(dense)
+        ds.tx_batches.append(dense)
+        ds.version = ds.delta.version
+        return ds.version
+
+    def append_points(self, name: str, points: np.ndarray) -> int:
+        """Append one (n, dim) point batch; bumps ``version``.  Previous
+        per-k centroids are KEPT — they seed the next warm-started fit."""
+        ds = self._dataset(name)
+        if ds.kind != "points":
+            raise ValueError(f"dataset {name!r} holds transactions, not points")
+        pts = np.asarray(points, dtype=np.float32)
+        if pts.ndim != 2 or pts.shape[1] != ds.dim:
+            raise ValueError(f"expected (n, {ds.dim}) points, got {pts.shape}")
+        ds.pt_batches.append(pts)
+        ds.version += 1
+        return ds.version
+
+    def dataset_version(self, name: str) -> int:
+        return self._dataset(name).version
+
+    # -- request lifecycle ----------------------------------------------------
+
+    def submit(self, tenant: str, app: str, dataset: str, params: dict | None = None) -> int:
+        """Admit one request; returns its id.  Raises ``QueueFullError``
+        when the tenant's queue is at capacity (the rejected request stays
+        in the ledger) and ``ValueError`` on app/dataset mismatch."""
+        if app not in APPS:
+            raise ValueError(f"unknown app {app!r}; expected one of {APPS}")
+        ds = self._dataset(dataset)
+        need = "transactions" if app in _TX_APPS else "points"
+        if ds.kind != need:
+            raise ValueError(f"app {app!r} needs a {need} dataset; {dataset!r} is {ds.kind}")
+        req = MiningRequest(
+            request_id=next(self._ids),
+            tenant=str(tenant),
+            app=app,
+            dataset=dataset,
+            params=dict(params or {}),
+            submitted_at=self._clock(),
+        )
+        self._requests[req.request_id] = req
+        self.queues.push(req)  # may raise QueueFullError (req marked rejected)
+        return req.request_id
+
+    def poll(self, request_id: int) -> str:
+        return self._requests[request_id].status
+
+    def result(self, request_id: int) -> Any:
+        req = self._requests[request_id]
+        if req.status == "done":
+            return self._results[request_id]
+        if req.status == "failed":
+            raise RuntimeError(f"request {request_id} failed: {req.error}")
+        raise RuntimeError(f"request {request_id} is {req.status}, not done")
+
+    def request(self, request_id: int) -> MiningRequest:
+        return self._requests[request_id]
+
+    # -- the scheduler tick ---------------------------------------------------
+
+    def _exec_key(self, req: MiningRequest) -> tuple:
+        return (req.dataset, req.dataset_version, req.app, params_key(req.params))
+
+    def step(self, max_requests: int = 8) -> list[int]:
+        """One dispatch wave: fair-pick up to ``max_requests`` queued
+        requests, coalesce identical ones, serve from cache or execute.
+        Returns the ids completed (done or failed) this wave."""
+        batch = self.queues.pick_batch(max_requests)
+        now = self._clock()
+        for req in batch:
+            req.status = "running"
+            req.started_at = now
+            req.dataset_version = self._datasets[req.dataset].version
+            self.pick_log.append(req.tenant)
+        finished: list[int] = []
+        for _, reqs in coalesce(batch, self._exec_key).items():
+            rep = reqs[0]
+            for other in reqs[1:]:
+                other.coalesced_into = rep.request_id
+            self.coalesced += len(reqs) - 1
+            ckey = ResultCache.key(rep.dataset, rep.dataset_version, rep.app, rep.params)
+            value = self.cache.get(ckey)
+            if value is not None:
+                self._finish(reqs, value, compute_s=0.0, backend="cache", cache_hit=True)
+            else:
+                try:
+                    value, compute_s, backend = self._execute(rep)
+                except Exception as e:  # noqa: BLE001 — one bad request must not kill the service
+                    err = f"{type(e).__name__}: {e}"
+                    tf = self._clock()
+                    for req in reqs:
+                        req.status = "failed"
+                        req.error = err
+                        req.finished_at = tf
+                        finished.append(req.request_id)
+                    continue
+                self.cache.put(ckey, value)
+                self.executions += 1
+                self._finish(reqs, value, compute_s=compute_s, backend=backend, cache_hit=False)
+            finished.extend(r.request_id for r in reqs)
+        return finished
+
+    def drain(self, max_requests: int = 8, max_steps: int | None = None) -> list[int]:
+        """Step until every queue is empty (or ``max_steps``); returns all
+        ids completed."""
+        done: list[int] = []
+        steps = 0
+        while self.queues.pending():
+            done.extend(self.step(max_requests))
+            steps += 1
+            if max_steps is not None and steps >= max_steps:
+                break
+        return done
+
+    def _finish(self, reqs, value, *, compute_s: float, backend: str, cache_hit: bool) -> None:
+        tf = self._clock()
+        share = compute_s / len(reqs)
+        for req in reqs:
+            req.status = "done"
+            req.finished_at = tf
+            req.cache_hit = cache_hit
+            req.backend = backend
+            req.compute_s = share
+            self._results[req.request_id] = value
+
+    # -- execution ------------------------------------------------------------
+
+    def _execute(self, req: MiningRequest) -> tuple[Any, float, str]:
+        """Run one representative request; returns (result, measured
+        device compute seconds, backend name)."""
+        ds = self._datasets[req.dataset]
+        p = req.params
+        if req.app == "apriori":
+            return self._run_single(req, lambda: ds.delta.query(
+                int(p.get("k", 3)), self._min_count(ds, p)))
+        if req.app in ("gfm", "fdm"):
+            sites = [
+                TransactionDB.from_dense(s)
+                for s in split_transactions(
+                    ds.pooled_dense(), int(p.get("n_sites", self.n_sites)),
+                    seed=int(p.get("split_seed", 0)))
+            ]
+            runner = self.runtime.run_gfm if req.app == "gfm" else self.runtime.run_fdm
+            run = runner(sites, int(p.get("k", 3)), float(p.get("minsup", 0.1)))
+            return run.result, run.report.compute_s, run.backend
+        if req.app == "kmeans":
+            k = int(p.get("k", 3))
+            iters = int(p.get("iters", 25))
+            x = ds.pooled_points()
+            warm = ds.warm_centers.get(k)
+            if warm is not None:
+                fn = lambda: kmeans_warm(x, warm, iters=iters, use_kernel=self.use_kernel)  # noqa: E731
+            else:
+                key = jax.random.PRNGKey(int(p.get("seed", 0)))
+                fn = lambda: kmeans(key, x, k, iters=iters, use_kernel=self.use_kernel)  # noqa: E731
+            value, compute_s, backend = self._run_single(req, fn)
+            ds.warm_centers[k] = np.asarray(value.centers)
+            return value, compute_s, backend
+        if req.app == "vclustering":
+            xs = split_sites(
+                ds.pooled_points(), int(p.get("n_sites", self.n_sites)),
+                seed=int(p.get("split_seed", 0)))
+            cfg = VClusterConfig(
+                k_local=int(p.get("k_local", 8)),
+                kmeans_iters=int(p.get("iters", 15)),
+                use_kernel=self.use_kernel,
+            )
+            run = self.runtime.run_vclustering(
+                jax.random.PRNGKey(int(p.get("seed", 0))), xs, cfg)
+            return run.result, run.report.compute_s, run.backend
+        raise ValueError(f"unknown app {req.app!r}")
+
+    @staticmethod
+    def _min_count(ds: _Dataset, params: dict) -> int:
+        if "min_count" in params:
+            return int(params["min_count"])
+        minsup = float(params.get("minsup", 0.1))
+        return max(1, int(math.ceil(minsup * ds.delta.n_tx)))
+
+    def _run_single(self, req: MiningRequest, fn) -> tuple[Any, float, str]:
+        """Execute a single-job DAG through the engine so the request is
+        ledgered exactly like any grid run (RunReport, backend, measured
+        compute feeding the simulated clock)."""
+        name = f"{req.app}"
+        measured: dict[str, float] = {}
+        jobs = [SiteJob(name=name, fn=timed(fn, measured, name))]
+        rep, results = self.runtime.engine.run_site_jobs(
+            jobs, name=f"serve-{req.app}-{req.request_id}")
+        return results[name], rep.compute_s, rep.backend
+
+    # -- ledger ---------------------------------------------------------------
+
+    def ledger(self) -> dict:
+        """Service-level + per-request + per-tenant ledger, JSON-ready."""
+        requests = [self._record(r) for r in sorted(self._requests.values(),
+                                                    key=lambda r: r.request_id)]
+        return {
+            "backend": self.backend_name,
+            "executions": self.executions,
+            "coalesced": self.coalesced,
+            "rejected": self.queues.rejected,
+            "cache": {
+                "hits": self.cache.stats.hits,
+                "misses": self.cache.stats.misses,
+                "evictions": self.cache.stats.evictions,
+                "hit_rate": self.cache.stats.hit_rate(),
+                "entries": len(self.cache),
+            },
+            "per_tenant": self.tenant_ledger(),
+            "requests": requests,
+        }
+
+    def tenant_ledger(self) -> dict[str, dict]:
+        out: dict[str, dict] = {}
+        for req in self._requests.values():
+            t = out.setdefault(req.tenant, {
+                "submitted": 0, "done": 0, "failed": 0, "rejected": 0,
+                "cache_hits": 0, "coalesced": 0,
+                "queue_wait_s": 0.0, "compute_s": 0.0, "service_s": 0.0,
+            })
+            t["submitted"] += 1
+            if req.status in ("done", "failed", "rejected"):
+                t[req.status] += 1
+            if req.cache_hit:
+                t["cache_hits"] += 1
+            if req.coalesced_into is not None:
+                t["coalesced"] += 1
+            t["queue_wait_s"] += req.queue_wait_s
+            t["compute_s"] += req.compute_s
+            t["service_s"] += req.service_s
+        return out
+
+    @staticmethod
+    def _record(req: MiningRequest) -> dict:
+        return {
+            "request_id": req.request_id,
+            "tenant": req.tenant,
+            "app": req.app,
+            "dataset": req.dataset,
+            "dataset_version": req.dataset_version,
+            "params": {str(k): v for k, v in req.params.items()},
+            "status": req.status,
+            "cache_hit": req.cache_hit,
+            "coalesced_into": req.coalesced_into,
+            "backend": req.backend,
+            "queue_wait_s": req.queue_wait_s,
+            "compute_s": req.compute_s,
+            "service_s": req.service_s,
+            "error": req.error,
+        }
+
+
+# ---------------------------------------------------------------------------
+# Fairness audit
+# ---------------------------------------------------------------------------
+
+
+def fairness_violations(pick_log: list[str], tenants: list[str], window: int) -> list[str]:
+    """Audit the round-robin bound on a pick-log prefix during which every
+    tenant was backlogged: with uniform weights, after any prefix of the
+    first ``window`` picks the per-tenant pick counts differ by at most
+    one.  Returns human-readable violations (empty = fair)."""
+    counts = dict.fromkeys(tenants, 0)
+    bad: list[str] = []
+    for i, tenant in enumerate(pick_log[:window]):
+        if tenant in counts:
+            counts[tenant] += 1
+        spread = max(counts.values()) - min(counts.values())
+        if spread > 1:
+            bad.append(f"after pick {i + 1}: per-tenant counts {counts} spread {spread} > 1")
+    return bad
+
+
+# ---------------------------------------------------------------------------
+# CLI driver: bursty synthetic multi-tenant trace
+# ---------------------------------------------------------------------------
+
+
+def _build_service(args) -> MiningService:
+    svc = MiningService(
+        backend=args.backend,
+        n_sites=args.n_sites,
+        max_depth=args.max_depth,
+        count_backend="jnp",
+        use_kernel=False,
+    )
+    svc.register_dataset("tx", "transactions", n_items=args.n_items)
+    svc.register_dataset("pts", "points", dim=2)
+    svc.append_transactions("tx", ibm_transactions(args.seed, 240, args.n_items))
+    pts, _ = gaussian_mixture(args.seed, 240, 2, 3)
+    svc.append_points("pts", pts)
+    return svc
+
+
+def _trace_bursts(args, rng: np.random.Generator) -> list[list[tuple[str, str, str, dict]]]:
+    """A bursty multi-tenant trace: each burst opens with one request all
+    tenants share (coalescing fodder), then per-tenant draws from a SMALL
+    param pool, so repeats within a dataset version become cache hits."""
+    tenants = [f"tenant{i}" for i in range(args.tenants)]
+    pool = [
+        ("apriori", "tx", {"k": 3, "minsup": 0.3}),
+        ("apriori", "tx", {"k": 2, "minsup": 0.4}),
+        ("gfm", "tx", {"k": 2, "minsup": 0.35, "n_sites": args.n_sites}),
+        ("fdm", "tx", {"k": 2, "minsup": 0.35, "n_sites": args.n_sites}),
+        ("kmeans", "pts", {"k": 3, "iters": 10}),
+        ("kmeans", "pts", {"k": 4, "iters": 10}),
+        ("vclustering", "pts", {"n_sites": args.n_sites, "k_local": 4, "iters": 8}),
+    ]
+    bursts: list[list[tuple[str, str, str, dict]]] = []
+    remaining = args.requests
+    while remaining > 0:
+        burst: list[tuple[str, str, str, dict]] = []
+        shared = pool[int(rng.integers(len(pool)))]
+        for t in tenants:  # the burst's shared query — first in every queue
+            burst.append((t, *shared))
+        per_tenant = max(1, min(args.burst, remaining // max(len(tenants), 1)) - 1)
+        for t in tenants:
+            for _ in range(per_tenant):
+                app, dataset, params = pool[int(rng.integers(len(pool)))]
+                burst.append((t, app, dataset, params))
+        bursts.append(burst)
+        remaining -= len(burst)
+    return bursts
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--requests", type=int, default=50, help="total requests in the trace")
+    ap.add_argument("--tenants", type=int, default=3)
+    ap.add_argument("--burst", type=int, default=4, help="max requests per tenant per burst")
+    ap.add_argument("--backend", default="batched", choices=("inline", "batched", "multihost"))
+    ap.add_argument("--n-sites", type=int, default=4)
+    ap.add_argument("--n-items", type=int, default=12)
+    ap.add_argument("--max-depth", type=int, default=64)
+    ap.add_argument("--max-per-step", type=int, default=8)
+    ap.add_argument("--append-every", type=int, default=2,
+                    help="append fresh data every N bursts (version bump)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ledger-out", default=None, help="write the JSON ledger here")
+    ap.add_argument("--check", action="store_true",
+                    help="assert fairness bound, cache hits and coalescing (CI gate)")
     args = ap.parse_args(argv)
 
-    cfg = configs.get(args.arch)
-    if args.reduced:
-        cfg = reduce_cfg(cfg)
-    max_len = args.prompt_len + args.gen + (cfg.frontend_len if cfg.frontend != "none" and not cfg.is_encdec else 0)
+    rng = np.random.default_rng(args.seed)
+    svc = _build_service(args)
+    tenants = [f"tenant{i}" for i in range(args.tenants)]
+    bursts = _trace_bursts(args, rng)
 
-    params = T.init_params(cfg, jax.random.PRNGKey(0))
-    rng = np.random.default_rng(0)
-    toks = jnp.asarray(rng.integers(0, cfg.vocab, (args.batch, args.prompt_len), dtype=np.int32))
-    fe = None
-    if cfg.frontend != "none":
-        fe = jnp.asarray(rng.normal(size=(args.batch, cfg.frontend_len, cfg.d_model)).astype(np.float32))
+    fairness_ok = True
+    fairness_detail: list[str] = []
+    rejected = 0
+    t0 = time.perf_counter()
+    for b, burst in enumerate(bursts):
+        for tenant, app, dataset, params in burst:
+            try:
+                svc.submit(tenant, app, dataset, params)
+            except QueueFullError:
+                rejected += 1
+        # every tenant is backlogged right now: audit the fairness bound
+        # over the picks that drain this burst's guaranteed backlog
+        window = len(svc.pick_log) + min(svc.queues.depth(t) for t in tenants) * len(tenants)
+        svc.drain(max_requests=args.max_per_step)
+        viol = fairness_violations(svc.pick_log[:window], tenants, window)
+        if viol:
+            fairness_ok = False
+            fairness_detail.extend(f"burst {b}: {v}" for v in viol[:3])
+        if args.append_every and (b + 1) % args.append_every == 0:
+            svc.append_transactions("tx", ibm_transactions(args.seed + b + 1, 60, args.n_items))
+            pts, _ = gaussian_mixture(args.seed + b + 1, 60, 2, 3)
+            svc.append_points("pts", pts)
+    wall = time.perf_counter() - t0
 
-    cache = jax.tree.map(
-        lambda s: jnp.zeros(s.shape, s.dtype),
-        T.cache_specs(cfg, args.batch, max_len),
-        is_leaf=lambda x: isinstance(x, ShapeAxes),
-    )
+    led = svc.ledger()
+    done = [r for r in led["requests"] if r["status"] == "done"]
+    failed = [r for r in led["requests"] if r["status"] == "failed"]
+    lat = np.array([r["service_s"] for r in done]) if done else np.zeros(1)
+    print(f"[serve] backend={led['backend']} requests={len(led['requests'])} "
+          f"done={len(done)} failed={len(failed)} rejected={led['rejected']}")
+    print(f"[serve] executions={led['executions']} coalesced={led['coalesced']} "
+          f"cache hits={led['cache']['hits']} misses={led['cache']['misses']} "
+          f"hit_rate={led['cache']['hit_rate']:.2f}")
+    print(f"[serve] throughput={len(done) / max(wall, 1e-9):.1f} req/s "
+          f"latency p50={np.percentile(lat, 50) * 1e3:.1f}ms "
+          f"p95={np.percentile(lat, 95) * 1e3:.1f}ms")
+    for tenant, t in sorted(led["per_tenant"].items()):
+        print(f"[serve]   {tenant}: submitted={t['submitted']} done={t['done']} "
+              f"cache_hits={t['cache_hits']} coalesced={t['coalesced']} "
+              f"queue_wait={t['queue_wait_s']:.3f}s compute={t['compute_s']:.3f}s")
+    print(f"[serve] fairness bound (round-robin, spread<=1): "
+          f"{'OK' if fairness_ok else 'VIOLATED'}")
 
-    prefill = jax.jit(lambda p, t, c, f: T.prefill(cfg, p, t, c, f, chunk=min(1024, max_len)))
-    decode = jax.jit(lambda p, t, pos, c: T.decode_step(cfg, p, t, pos, c))
+    if args.ledger_out:
+        with open(args.ledger_out, "w") as f:
+            json.dump(led, f, indent=2, default=float)
+        print(f"[serve] ledger -> {args.ledger_out}")
 
-    t0 = time.time()
-    logits, cache = prefill(params, toks, cache, fe)
-    next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
-    print(f"[serve] prefill {args.prompt_len} tokens in {time.time() - t0:.2f}s")
-
-    pos0 = args.prompt_len + (cfg.frontend_len if cfg.frontend != "none" and not cfg.is_encdec else 0)
-    out = [next_tok]
-    t0 = time.time()
-    for i in range(args.gen - 1):
-        logits, cache = decode(params, next_tok, jnp.int32(pos0 + i), cache)
-        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
-        out.append(next_tok)
-    gen = np.concatenate([np.asarray(t) for t in out], axis=1)
-    dt = time.time() - t0
-    print(f"[serve] generated {args.gen} tokens/seq x {args.batch} seqs in {dt:.2f}s "
-          f"({args.gen * args.batch / max(dt, 1e-9):.1f} tok/s)")
-    print(f"[serve] sample: {gen[0][:12].tolist()}")
+    if args.check:
+        problems: list[str] = []
+        if failed:
+            problems.append(f"{len(failed)} requests failed: {failed[0]['error']}")
+        if led["cache"]["hits"] < 1:
+            problems.append("expected cache hits on repeated queries, got 0")
+        if led["coalesced"] < 1:
+            problems.append("expected coalesced identical requests, got 0")
+        if not fairness_ok:
+            problems.append("fairness bound violated: " + "; ".join(fairness_detail))
+        if problems:
+            for p in problems:
+                print(f"[serve] CHECK FAILED: {p}", file=sys.stderr)
+            return 1
+        print("[serve] checks passed: fairness bound, cache hits, coalescing")
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -11,9 +11,20 @@ vmapped fan-out dispatch, proven bit-identical to inline by the
 conformance suite); ``backend="inline"`` restores the per-job host loop,
 and ``MultiHostBackend`` distributes the same DAGs over a
 ``jax.distributed`` process mesh with wave-fused result shipping.
+``ResultCache`` is the serving layer's versioned result cache
+(``launch.serve``): keys carry the dataset version, so stale results are
+unreachable by construction.
 """
 
 from repro.runtime.backends import MultiHostBackend
+from repro.runtime.cache import CacheStats, ResultCache, params_key
 from repro.runtime.gridruntime import GridRuntime, RuntimeRun
 
-__all__ = ["GridRuntime", "MultiHostBackend", "RuntimeRun"]
+__all__ = [
+    "CacheStats",
+    "GridRuntime",
+    "MultiHostBackend",
+    "ResultCache",
+    "RuntimeRun",
+    "params_key",
+]

@@ -48,6 +48,11 @@ and the measured times are owner-authoritative everywhere, so every
 process invokes ``call`` for the same jobs in the same order.  Keep
 per-process state OUT of the scheduling inputs — e.g. a ``rescue_path``
 resuming on one process only would desynchronize the collectives.
+
+The serving layer (``launch.serve.MiningService``) treats this backend
+as a drop-in execution strategy: a service built with
+``backend="multihost"`` dispatches every coalesced tenant request
+through the same ownership/shipping machinery, one run at a time.
 """
 
 from __future__ import annotations

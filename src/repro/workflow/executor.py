@@ -12,9 +12,11 @@ one-at-a-time serializes them on the device.
 
 Backends:
 
-  * ``inline`` (default) — today's behavior, bit-for-bit: each job's
-    ``fn`` is called in scheduler order, one dispatch per job.
-  * ``batched`` — groups ready shape-identical fan-out jobs by their
+  * ``inline`` (the bare ``Engine`` default) — the reference behavior,
+    bit-for-bit: each job's ``fn`` is called in scheduler order, one
+    dispatch per job.
+  * ``batched`` (the ``GridRuntime`` default since the inline->batched
+    flip) — groups ready shape-identical fan-out jobs by their
     ``batch_key`` and dispatches ONE fused (vmapped) call across the
     site axis via the group's ``batched_fn``, then apportions the
     measured batch wall time equally per job — so the simulated grid
@@ -36,6 +38,12 @@ plus the optional :meth:`ExecutionBackend.partition` ownership hook.
 Everything else — fault injection, retries, rescue files, speculation,
 the simulated clock — is scheduler policy and stays in the engine,
 identical across backends.
+
+One layer up, the continuous mining service (``launch.serve``) leans on
+exactly this seam: it coalesces identical tenant requests and routes
+every execution through whichever backend its runtime carries, so a
+multi-tenant burst of same-shape mining queries reaches the device as
+the fused dispatches this module implements.
 """
 
 from __future__ import annotations

@@ -1,0 +1,160 @@
+"""Delta-Apriori correctness contract: incremental maintenance over an
+append-only stream is BIT-IDENTICAL to from-scratch Apriori over the
+concatenated data (property-tested over random append histories), and
+the warm-started k-means entry point continues a previous fit.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from repro.testing import given, settings, strategies as st
+
+from repro.core.apriori import DeltaApriori, concat_dbs, local_apriori
+from repro.core.kmeans import kmeans, kmeans_warm
+from repro.data.synthetic import gaussian_mixture
+
+
+def _random_batches(rng: np.random.Generator, n_batches: int, n_items: int):
+    """Random dense bool transaction batches (each with >=1 transaction)."""
+    return [
+        rng.random((int(rng.integers(3, 25)), n_items)) < rng.uniform(0.2, 0.7)
+        for _ in range(n_batches)
+    ]
+
+
+def _assert_bitidentical(delta_res, scratch_res):
+    assert delta_res.counts == scratch_res.counts
+    assert delta_res.frequent == scratch_res.frequent
+    assert delta_res.candidates_counted == scratch_res.candidates_counted
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=10_000),
+    n_batches=st.integers(min_value=1, max_value=4),
+    n_items=st.integers(min_value=4, max_value=9),
+    k_max=st.integers(min_value=1, max_value=4),
+)
+def test_delta_query_bitidentical_to_scratch(seed, n_batches, n_items, k_max):
+    """query(k, t) == local_apriori(concat(batches), k, t) for every
+    random append history and threshold — same counts, same frequents."""
+    rng = np.random.default_rng(seed)
+    batches = _random_batches(rng, n_batches, n_items)
+    state = DeltaApriori(n_items)
+    for b in batches:
+        state.append(b)
+    total = state.n_tx
+    min_count = int(rng.integers(1, max(total // 2, 1) + 1))
+    scratch = local_apriori(concat_dbs(state._batches), k_max, min_count)
+    _assert_bitidentical(state.query(k_max, min_count), scratch)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000))
+def test_delta_bitidentical_at_every_version(seed):
+    """Interleaved appends and queries: the identity holds at EVERY
+    version, not just the final one."""
+    rng = np.random.default_rng(seed)
+    n_items = 6
+    state = DeltaApriori(n_items)
+    for b in _random_batches(rng, 3, n_items):
+        state.append(b)
+        min_count = max(1, state.n_tx // 4)
+        scratch = local_apriori(concat_dbs(state._batches), 3, min_count)
+        _assert_bitidentical(state.query(3, min_count), scratch)
+
+
+def test_repeat_query_costs_zero_device_passes():
+    rng = np.random.default_rng(0)
+    state = DeltaApriori(8)
+    for b in _random_batches(rng, 2, 8):
+        state.append(b)
+    first = state.query(3, max(1, state.n_tx // 5))
+    again = state.query(3, max(1, state.n_tx // 5))
+    assert first.count_calls >= 0
+    assert again.count_calls == 0  # every candidate already cached
+    _assert_bitidentical(again, first)
+
+
+def test_delta_query_cheaper_than_scratch():
+    """The point of the delta path: a query after appends runs no more
+    device count passes than the from-scratch equivalent (and strictly
+    fewer once a previous query populated the cache)."""
+    rng = np.random.default_rng(1)
+    state = DeltaApriori(8)
+    state.append(_random_batches(rng, 1, 8)[0])
+    min_count = max(1, state.n_tx // 5)
+    state.query(3, min_count)
+    state.append(_random_batches(rng, 1, 8)[0])
+    min_count = max(1, state.n_tx // 5)
+    scratch = local_apriori(concat_dbs(state._batches), 3, min_count)
+    delta_res = state.query(3, min_count)
+    _assert_bitidentical(delta_res, scratch)
+    assert delta_res.count_calls <= scratch.count_calls
+
+
+def test_version_bumps_per_append():
+    state = DeltaApriori(5)
+    assert state.version == 0
+    assert state.append(np.ones((4, 5), dtype=bool)) == 1
+    assert state.append(np.zeros((2, 5), dtype=bool)) == 2
+    assert state.n_tx == 6
+
+
+def test_append_rejects_wrong_universe():
+    state = DeltaApriori(5)
+    with pytest.raises(ValueError, match="items"):
+        state.append(np.ones((3, 7), dtype=bool))
+
+
+def test_query_before_any_append_raises():
+    with pytest.raises(RuntimeError, match="append"):
+        DeltaApriori(4).query(2, 1)
+
+
+def test_concat_dbs_rejects_mismatched_universes():
+    from repro.core.apriori import TransactionDB
+
+    a = TransactionDB.from_dense(np.ones((2, 4), dtype=bool))
+    b = TransactionDB.from_dense(np.ones((2, 6), dtype=bool))
+    with pytest.raises(ValueError, match="universes"):
+        concat_dbs([a, b])
+    with pytest.raises(ValueError, match="at least one"):
+        concat_dbs([])
+
+
+# -- warm-started k-means ----------------------------------------------------
+
+
+def test_kmeans_warm_continues_converged_fit():
+    """Warm-starting from a converged fit's centers reproduces its fixed
+    point on identical data."""
+    x, _ = gaussian_mixture(0, 200, 2, 3)
+    cold = kmeans(jax.random.PRNGKey(0), x, 3, iters=40)
+    warm = kmeans_warm(x, cold.centers, iters=5)
+    np.testing.assert_allclose(np.asarray(warm.centers), np.asarray(cold.centers),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(float(warm.inertia), float(cold.inertia),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_kmeans_warm_does_not_regress_on_drifted_data():
+    """On appended (drifted) data, Lloyd refinement from the previous
+    centroids can only improve on assigning the new data to them as-is."""
+    x0, _ = gaussian_mixture(1, 150, 2, 3)
+    cold = kmeans(jax.random.PRNGKey(0), x0, 3, iters=30)
+    x1, _ = gaussian_mixture(2, 80, 2, 3, spread=11.0)
+    x = np.concatenate([x0, x1], axis=0)
+    prev = np.asarray(cold.centers)
+    d2 = ((x[:, None, :] - prev[None, :, :]) ** 2).sum(-1)
+    inertia_at_prev = float(d2.min(axis=1).sum())
+    warm = kmeans_warm(x, prev, iters=10)
+    assert float(warm.inertia) <= inertia_at_prev + 1e-3
+    assert warm.centers.shape == (3, 2)
+    assert warm.assign.shape == (len(x),)

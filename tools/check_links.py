@@ -1,0 +1,67 @@
+"""Docs link check: dead RELATIVE links in README.md / docs/ fail CI.
+
+Scans markdown files for inline links and images (``[text](target)``),
+skips absolute URLs (http/https/mailto) and pure in-page anchors, and
+verifies every remaining target resolves to an existing file or
+directory relative to the markdown file that references it (fragments
+after ``#`` are stripped — existence of the file is what is checked).
+
+Dependency-free by design (stdlib only) so the CI step needs nothing
+installed:
+
+    python tools/check_links.py            # checks README.md + docs/**.md
+    python tools/check_links.py FILE...    # explicit file list
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+# inline markdown links/images: [text](target) — greedy enough for docs,
+# ignores fenced code because targets there rarely parse as paths anyway
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def check_file(md: Path, root: Path) -> list[str]:
+    errors: list[str] = []
+    text = md.read_text(encoding="utf-8")
+    for lineno, line in enumerate(text.splitlines(), start=1):
+        for m in LINK_RE.finditer(line):
+            target = m.group(1)
+            if target.startswith(SKIP_PREFIXES):
+                continue
+            path_part = target.split("#", 1)[0]
+            if not path_part:
+                continue
+            resolved = (md.parent / path_part).resolve()
+            if not resolved.exists():
+                rel = md.relative_to(root)
+                errors.append(f"{rel}:{lineno}: dead link -> {target}")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    root = Path(__file__).resolve().parent.parent
+    if argv:
+        files = [Path(a).resolve() for a in argv]
+    else:
+        files = [root / "README.md", *sorted((root / "docs").glob("**/*.md"))]
+    files = [f for f in files if f.exists()]
+    errors: list[str] = []
+    for md in files:
+        errors.extend(check_file(md, root))
+    for e in errors:
+        print(f"FAIL  {e}")
+    n = len(files)
+    if errors:
+        print(f"# link check: {len(errors)} dead link(s) across {n} file(s)")
+        return 1
+    print(f"# link check: OK ({n} file(s), all relative links resolve)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
