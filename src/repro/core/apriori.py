@@ -391,9 +391,56 @@ class DeltaApriori:
         self._counts: dict[Itemset, int] = {(i,): 0 for i in range(self.n_items)}
         self.count_calls = 0  # lifetime device count passes (the ledger)
 
+    @classmethod
+    def from_db(cls, db: TransactionDB, backend: str = "jnp") -> "DeltaApriori":
+        """Seed incremental state from an already-packed DB (one singleton
+        pass, no dense round-trip) — how a grid site wraps its local shard
+        so per-level candidate counts serve from the cumulative cache."""
+        st = cls(db.n_items, backend=backend)
+        sup1 = item_supports(db)
+        st.count_calls += 1
+        for item, c in enumerate(sup1):
+            st._counts[(int(item),)] += int(c)
+        st._batches.append(db)
+        st._full = db
+        st.version = 1
+        return st
+
     @property
     def n_tx(self) -> int:
         return sum(db.n_tx for db in self._batches)
+
+    def stream(self) -> TransactionDB:
+        """The full appended stream as one DB (lazy concat, cached)."""
+        if not self._batches:
+            raise RuntimeError("DeltaApriori.stream before any append")
+        if self._full is None:
+            self._full = concat_dbs(self._batches)
+        return self._full
+
+    def uncached(self, itemsets: Iterable[Itemset]) -> list[Itemset]:
+        """The subset of ``itemsets`` this state has never counted."""
+        return [its for its in itemsets if its not in self._counts]
+
+    def fold_exact(self, itemsets: Sequence[Itemset], counts) -> None:
+        """Install exact full-stream counts computed EXTERNALLY (e.g. by a
+        fused site-axis dispatch).  Caller contract: ``counts[i]`` is the
+        support of ``itemsets[i]`` over the whole appended stream — the
+        cumulative invariant extends to them as if counted here.  Ledgers
+        one device pass when non-empty."""
+        if not itemsets:
+            return
+        self.count_calls += 1
+        for its, c in zip(itemsets, counts):
+            self._counts[its] = int(c)
+
+    def counts_for(self, itemsets: Sequence[Itemset]) -> dict[Itemset, int]:
+        """Exact cumulative counts for arbitrary itemsets, counting only
+        the never-seen ones (at most one device pass); cached itemsets are
+        served for free — the local-pass entry point for workloads that
+        bring their own candidate lists (count-distribution Apriori)."""
+        self._count_new(self.uncached(itemsets))
+        return {its: self._counts[its] for its in itemsets}
 
     def append(self, dense_batch: np.ndarray) -> int:
         """Fold one appended transaction batch into the cumulative counts
@@ -467,6 +514,65 @@ class DeltaApriori:
             count_calls=self.count_calls - calls0,
             candidates_counted=n_cand,
         )
+
+
+# ---------------------------------------------------------------------------
+# Streaming top-k frequent itemsets (served via the delta path)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class TopKResult:
+    """The ``top`` highest-support itemsets of sizes 1..k_max over the
+    appended stream, with the support threshold the search settled at."""
+
+    items: list[tuple[Itemset, int]]  # (itemset, exact count), best first
+    threshold: int  # smallest min_count tried (all items have count >= it)
+    k_max: int
+    count_calls: int  # device passes THIS query cost (0 when fully cached)
+
+
+def topk_itemsets(
+    delta: DeltaApriori, k_max: int, top: int, floor: int = 1
+) -> TopKResult:
+    """Top-``top`` frequent itemsets by support over a DeltaApriori
+    stream, without the caller naming a support threshold.
+
+    Threshold search by halving: start at the stream length (only
+    universally-supported itemsets qualify) and halve until at least
+    ``top`` itemsets are frequent or the ``floor`` is reached.  Each
+    probe is a ``DeltaApriori.query``, so repeated probes serve counts
+    from the cumulative cache — on a warm state the whole search costs
+    zero device passes, which is what makes this a *streaming* query:
+    appends are O(|delta|), and the top-k refreshes cheaply after each.
+
+    Deterministic: ties break by (higher count, smaller itemset,
+    lexicographic items).  Exactness is inherited from the delta
+    contract — every returned count equals the from-scratch count.
+    """
+    if top < 1:
+        raise ValueError(f"top must be >= 1, got {top}")
+    if floor < 1:
+        raise ValueError(f"floor must be >= 1, got {floor}")
+    calls0 = delta.count_calls
+    t = max(int(delta.n_tx), floor)
+    while True:
+        res = delta.query(k_max, t)
+        found = [
+            (its, res.counts[its])
+            for lv in sorted(res.frequent)
+            for its in res.frequent[lv]
+        ]
+        if len(found) >= top or t <= floor:
+            break
+        t = max(floor, t // 2)
+    found.sort(key=lambda ic: (-ic[1], len(ic[0]), ic[0]))
+    return TopKResult(
+        items=found[:top],
+        threshold=t,
+        k_max=k_max,
+        count_calls=delta.count_calls - calls0,
+    )
 
 
 # ---------------------------------------------------------------------------

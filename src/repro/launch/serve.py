@@ -39,26 +39,18 @@ from __future__ import annotations
 
 import argparse
 import json
-import math
 import sys
 import time
 from dataclasses import dataclass, field
 from typing import Any
 
-import jax
 import numpy as np
 
-from repro.core.apriori import DeltaApriori, TransactionDB
-from repro.core.kmeans import kmeans, kmeans_warm
-from repro.core.vclustering import VClusterConfig
-from repro.data.synthetic import (
-    gaussian_mixture,
-    ibm_transactions,
-    split_sites,
-    split_transactions,
-)
+from repro.core.apriori import DeltaApriori
+from repro.data.synthetic import gaussian_mixture, ibm_transactions
 from repro.runtime.cache import ResultCache, params_key
 from repro.runtime.gridruntime import GridRuntime
+from repro.workflow.registry import app_names, get_workload, workloads
 from repro.workflow.requests import (
     MiningRequest,
     QueueFullError,
@@ -68,9 +60,9 @@ from repro.workflow.requests import (
 )
 from repro.workflow.sitejob import SiteJob, timed
 
-APPS = ("apriori", "gfm", "fdm", "kmeans", "vclustering")
-_TX_APPS = ("apriori", "gfm", "fdm")
-_PT_APPS = ("kmeans", "vclustering")
+# the ONE source of truth for the app family is the workload registry;
+# this module adds no app knowledge of its own
+APPS = app_names()
 
 
 @dataclass
@@ -138,6 +130,7 @@ class MiningService:
         self._clock = clock
         self.executions = 0  # backend runs actually dispatched
         self.coalesced = 0  # requests served by another request's run
+        self.invalid = 0  # submissions rejected by param validation
         # tenant pick order, for the fairness audit (CI gates a prefix
         # bound on this while every tenant stays backlogged)
         self.pick_log: list[str] = []
@@ -202,13 +195,18 @@ class MiningService:
     def submit(self, tenant: str, app: str, dataset: str, params: dict | None = None) -> int:
         """Admit one request; returns its id.  Raises ``QueueFullError``
         when the tenant's queue is at capacity (the rejected request stays
-        in the ledger) and ``ValueError`` on app/dataset mismatch."""
-        if app not in APPS:
-            raise ValueError(f"unknown app {app!r}; expected one of {APPS}")
+        in the ledger) and ``ValueError`` on app/dataset mismatch or
+        malformed params.  App names, dataset-kind checks and param
+        validation all derive from the workload registry — a malformed
+        request (unknown param, non-finite float) becomes a LEDGERED
+        rejection here, never a crash in the dispatch loop."""
+        spec = get_workload(app)  # ValueError: unknown app
         ds = self._dataset(dataset)
-        need = "transactions" if app in _TX_APPS else "points"
-        if ds.kind != need:
-            raise ValueError(f"app {app!r} needs a {need} dataset; {dataset!r} is {ds.kind}")
+        if ds.kind != spec.dataset_kind:
+            raise ValueError(
+                f"app {app!r} needs a {spec.dataset_kind} dataset; "
+                f"{dataset!r} is {ds.kind}"
+            )
         req = MiningRequest(
             request_id=next(self._ids),
             tenant=str(tenant),
@@ -217,6 +215,15 @@ class MiningService:
             params=dict(params or {}),
             submitted_at=self._clock(),
         )
+        try:
+            req.params = spec.validate_submitted(params)
+        except ValueError as e:
+            req.status = "rejected"
+            req.error = f"{type(e).__name__}: {e}"
+            req.finished_at = self._clock()
+            self._requests[req.request_id] = req
+            self.invalid += 1
+            raise
         self._requests[req.request_id] = req
         self.queues.push(req)  # may raise QueueFullError (req marked rejected)
         return req.request_id
@@ -306,55 +313,25 @@ class MiningService:
 
     def _execute(self, req: MiningRequest) -> tuple[Any, float, str]:
         """Run one representative request; returns (result, measured
-        device compute seconds, backend name)."""
+        device compute seconds, backend name).  Entirely table-driven off
+        the workload registry: local (delta-served) workloads run their
+        ``local_fn`` as a single ledgered job, grid workloads split the
+        dataset with the spec's ``site_split`` and go through the generic
+        ``GridRuntime.run`` — no per-app branches, so a registered app
+        can NEVER reach an "unknown app" dead end here (submit already
+        proved it is registered)."""
+        spec = get_workload(req.app)
         ds = self._datasets[req.dataset]
-        p = req.params
-        if req.app == "apriori":
-            return self._run_single(req, lambda: ds.delta.query(
-                int(p.get("k", 3)), self._min_count(ds, p)))
-        if req.app in ("gfm", "fdm"):
-            sites = [
-                TransactionDB.from_dense(s)
-                for s in split_transactions(
-                    ds.pooled_dense(), int(p.get("n_sites", self.n_sites)),
-                    seed=int(p.get("split_seed", 0)))
-            ]
-            runner = self.runtime.run_gfm if req.app == "gfm" else self.runtime.run_fdm
-            run = runner(sites, int(p.get("k", 3)), float(p.get("minsup", 0.1)))
-            return run.result, run.report.compute_s, run.backend
-        if req.app == "kmeans":
-            k = int(p.get("k", 3))
-            iters = int(p.get("iters", 25))
-            x = ds.pooled_points()
-            warm = ds.warm_centers.get(k)
-            if warm is not None:
-                fn = lambda: kmeans_warm(x, warm, iters=iters, use_kernel=self.use_kernel)  # noqa: E731
-            else:
-                key = jax.random.PRNGKey(int(p.get("seed", 0)))
-                fn = lambda: kmeans(key, x, k, iters=iters, use_kernel=self.use_kernel)  # noqa: E731
+        p = spec.resolve(req.params)
+        if spec.runner == "local":
+            fn = spec.local_fn(ds, p, self)
             value, compute_s, backend = self._run_single(req, fn)
-            ds.warm_centers[k] = np.asarray(value.centers)
+            if spec.finalize is not None:
+                spec.finalize(ds, p, value)
             return value, compute_s, backend
-        if req.app == "vclustering":
-            xs = split_sites(
-                ds.pooled_points(), int(p.get("n_sites", self.n_sites)),
-                seed=int(p.get("split_seed", 0)))
-            cfg = VClusterConfig(
-                k_local=int(p.get("k_local", 8)),
-                kmeans_iters=int(p.get("iters", 15)),
-                use_kernel=self.use_kernel,
-            )
-            run = self.runtime.run_vclustering(
-                jax.random.PRNGKey(int(p.get("seed", 0))), xs, cfg)
-            return run.result, run.report.compute_s, run.backend
-        raise ValueError(f"unknown app {req.app!r}")
-
-    @staticmethod
-    def _min_count(ds: _Dataset, params: dict) -> int:
-        if "min_count" in params:
-            return int(params["min_count"])
-        minsup = float(params.get("minsup", 0.1))
-        return max(1, int(math.ceil(minsup * ds.delta.n_tx)))
+        data = spec.site_split(ds, p, self)
+        run = self.runtime.run(req.app, data, spec.grid_params(p, self))
+        return run.result, run.report.compute_s, run.backend
 
     def _run_single(self, req: MiningRequest, fn) -> tuple[Any, float, str]:
         """Execute a single-job DAG through the engine so the request is
@@ -377,7 +354,7 @@ class MiningService:
             "backend": self.backend_name,
             "executions": self.executions,
             "coalesced": self.coalesced,
-            "rejected": self.queues.rejected,
+            "rejected": self.queues.rejected + self.invalid,
             "cache": {
                 "hits": self.cache.stats.hits,
                 "misses": self.cache.stats.misses,
@@ -474,17 +451,18 @@ def _build_service(args) -> MiningService:
 def _trace_bursts(args, rng: np.random.Generator) -> list[list[tuple[str, str, str, dict]]]:
     """A bursty multi-tenant trace: each burst opens with one request all
     tenants share (coalescing fodder), then per-tenant draws from a SMALL
-    param pool, so repeats within a dataset version become cache hits."""
+    param pool, so repeats within a dataset version become cache hits.
+    The pool is the registry's smoke params — EVERY registered workload
+    (the registry-added ones included) is in the trace for free."""
     tenants = [f"tenant{i}" for i in range(args.tenants)]
-    pool = [
-        ("apriori", "tx", {"k": 3, "minsup": 0.3}),
-        ("apriori", "tx", {"k": 2, "minsup": 0.4}),
-        ("gfm", "tx", {"k": 2, "minsup": 0.35, "n_sites": args.n_sites}),
-        ("fdm", "tx", {"k": 2, "minsup": 0.35, "n_sites": args.n_sites}),
-        ("kmeans", "pts", {"k": 3, "iters": 10}),
-        ("kmeans", "pts", {"k": 4, "iters": 10}),
-        ("vclustering", "pts", {"n_sites": args.n_sites, "k_local": 4, "iters": 8}),
-    ]
+    pool = []
+    for spec in workloads():
+        dsname = "tx" if spec.dataset_kind == "transactions" else "pts"
+        for smoke in spec.smoke_params:
+            params = dict(smoke)
+            if spec.runner == "grid":
+                params.setdefault("n_sites", args.n_sites)
+            pool.append((spec.name, dsname, params))
     bursts: list[list[tuple[str, str, str, dict]]] = []
     remaining = args.requests
     while remaining > 0:

@@ -21,6 +21,7 @@ service ledgers it per run and the service-level CI smoke gates on it.
 
 from __future__ import annotations
 
+import math
 from collections import OrderedDict
 from dataclasses import dataclass
 from typing import Any
@@ -30,7 +31,15 @@ def params_key(params: dict | None) -> tuple:
     """Canonical, hashable form of a request's params dict: keys sorted,
     unhashable containers (lists/dicts/sets) converted to deterministic
     tuples.  Logically identical params map to the same key regardless
-    of spelling — the coalescing and cache-keying contract."""
+    of spelling — the coalescing and cache-keying contract.
+
+    Total over JSON-ish values, including non-finite floats: ``inf`` and
+    ``-inf`` pass through (they compare equal to themselves), and every
+    ``nan`` canonicalizes to the one ``math.nan`` object (``nan != nan``
+    would otherwise split logically-identical params into distinct
+    keys).  The service rejects non-finite params at submit; totality
+    here is the backstop that keeps a malformed key from ever crashing
+    the dispatch loop."""
     return _canon(params or {})
 
 
@@ -41,10 +50,17 @@ def _canon(v: Any) -> Any:
         return tuple(_canon(x) for x in v)
     if isinstance(v, (set, frozenset)):
         return tuple(sorted((_canon(x) for x in v), key=repr))
-    if isinstance(v, float) and v == int(v):
-        # 0.1*3 style floats stay floats; clean integral floats normalize
-        # so params={"k": 3.0} and {"k": 3} share an entry
-        return int(v)
+    if isinstance(v, float):
+        # int(v) raises on inf/nan (OverflowError / ValueError), so the
+        # integral-float normalization must only see finite values
+        if math.isnan(v):
+            return math.nan  # the ONE nan object — identity makes keys equal
+        if math.isinf(v):
+            return v
+        if v == int(v):
+            # 0.1*3 style floats stay floats; clean integral floats
+            # normalize so params={"k": 3.0} and {"k": 3} share an entry
+            return int(v)
     return v
 
 

@@ -35,7 +35,6 @@ import argparse
 import json
 
 import jax
-import numpy as np
 
 from repro.core.apriori import TransactionDB
 from repro.core.vclustering import VClusterConfig
@@ -49,8 +48,12 @@ from repro.runtime.gridruntime import GridRuntime
 from repro.workflow.engine import Engine, RunReport
 from repro.workflow.faults import FaultInjector
 from repro.workflow.overhead import GridModel
+from repro.workflow.registry import RunContext, conformance_apps, get_workload
 
-APPS = ("vclustering", "gfm", "fdm")
+# every registered grid workload that opted into the conformance matrix —
+# registering a new app through workflow.registry extends this suite (and
+# tests/test_backend_conformance.py, and the benches) automatically
+APPS = conformance_apps()
 SCHEDULES = ("staged", "async")
 
 # small-but-nontrivial canonical inputs: enough structure that the mining
@@ -80,9 +83,17 @@ def _cfg() -> VClusterConfig:
     return VClusterConfig(k_local=3, kmeans_iters=5, use_kernel=False)
 
 
+def _conf_params(app: str, seed: int = 0) -> dict:
+    """The canonical params of one conformance cell, by dataset kind."""
+    if get_workload(app).dataset_kind == "points":
+        return {"key": jax.random.PRNGKey(seed), "cfg": _cfg()}
+    return {"k": _K_ITEMSETS, "minsup": _MINSUP}
+
+
 def run_app(app: str, n_sites: int, schedule: str, backend, *, faults=None, seed: int = 0):
-    """Execute one app through GridRuntime on the given execution backend
-    (name or instance); returns the RuntimeRun."""
+    """Execute one registered app through the generic GridRuntime.run on
+    the given execution backend (name or instance); returns the
+    RuntimeRun."""
     xs, dbs = make_inputs(n_sites, seed)
     engine = Engine(
         model=GridModel(),
@@ -92,44 +103,15 @@ def run_app(app: str, n_sites: int, schedule: str, backend, *, faults=None, seed
         backend=backend,
     )
     rt = GridRuntime(engine=engine, sync="pooled", use_kernel=False, count_backend="jnp")
-    if app == "vclustering":
-        return rt.run_vclustering(jax.random.PRNGKey(seed), xs, _cfg())
-    if app == "gfm":
-        return rt.run_gfm(dbs, _K_ITEMSETS, _MINSUP)
-    if app == "fdm":
-        return rt.run_fdm(dbs, _K_ITEMSETS, _MINSUP)
-    raise ValueError(f"unknown app {app!r}; expected one of {APPS}")
-
-
-def _comm_digest(comm) -> dict:
-    return {
-        "rounds": int(comm.rounds),
-        "bytes_sent": int(comm.bytes_sent),
-        "messages": int(comm.messages),
-        "count_calls": int(comm.count_calls),
-        "per_round_bytes": [int(b) for b in comm.per_round_bytes],
-    }
+    data = xs if get_workload(app).dataset_kind == "points" else dbs
+    return rt.run(app, data, _conf_params(app, seed))
 
 
 def result_digest(app: str, run) -> dict:
     """The mining output in canonical JSON-able form — the thing that must
-    be bit-for-bit identical across backends and processes."""
-    r = run.result
-    if app == "vclustering":
-        return {
-            "labels": np.asarray(r.labels).astype(int).tolist(),
-            "n_global": int(r.merged.n_global),
-            "n_merges": int(r.merged.n_merges),
-            "comm_bytes": int(r.comm_bytes),
-        }
-    freq = {",".join(map(str, its)): int(c) for its, c in sorted(r.frequent.items())}
-    out = {"frequent": freq, "comm": _comm_digest(r.comm)}
-    if app == "gfm":
-        out["pool_sizes"] = [int(p) for p in r.pool_sizes]
-        out["n_total_tx"] = int(r.n_total_tx)
-    else:
-        out["per_level_candidates"] = [int(c) for c in r.per_level_candidates]
-    return out
+    be bit-for-bit identical across backends and processes.  The digest
+    shape is the registered WorkloadSpec's, not this module's."""
+    return get_workload(app).digest(run.result)
 
 
 def schedule_fingerprint(rep: RunReport) -> dict:
@@ -165,17 +147,11 @@ def conformance_cell(app: str, n_sites: int, schedule: str, backend) -> dict:
 def job_sites(app: str, n_sites: int) -> dict[str, int]:
     """job name -> pre-assigned site for one app's DAG (the ownership
     audit needs it to check each SITE's jobs land on one process)."""
-    from repro.core.fdm import fdm_site_jobs
-    from repro.core.gfm import gfm_site_jobs
-    from repro.core.vclustering import vcluster_site_jobs
-
+    spec = get_workload(app)
     xs, dbs = make_inputs(n_sites)
-    if app == "vclustering":
-        jobs = vcluster_site_jobs(jax.random.PRNGKey(0), xs, _cfg())
-    elif app == "gfm":
-        jobs = gfm_site_jobs(dbs, _K_ITEMSETS, _MINSUP, backend="jnp")
-    else:
-        jobs = fdm_site_jobs(dbs, _K_ITEMSETS, _MINSUP, backend="jnp")
+    data = xs if spec.dataset_kind == "points" else dbs
+    ctx = RunContext(measured={}, count_backend="jnp", use_kernel=False, cluster_sync=None)
+    jobs, _ = spec.build_jobs(data, spec.resolve(_conf_params(app)), ctx)
     return {j.name: int(j.site) for j in jobs}
 
 

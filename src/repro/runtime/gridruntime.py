@@ -25,20 +25,17 @@ from dataclasses import dataclass, field
 from typing import Any
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
-from repro.core.fdm import fdm_site_jobs
-from repro.core.gfm import gfm_site_jobs
 from repro.core.stats import SuffStats
 from repro.core.vclustering import (
     MergeResult,
     VClusterConfig,
     merge_gathered,
-    vcluster_site_jobs,
 )
 from repro.launch.mesh import make_site_mesh
+from repro.workflow.registry import RunContext, get_workload
 from repro.workflow.engine import Engine, RunReport
 from repro.workflow.executor import ExecutionBackend
 from repro.workflow.overhead import (
@@ -271,6 +268,32 @@ class GridRuntime:
             estimated_staged_s=estimate_stages_from_specs(specs, model),
         )
 
+    def run(self, app: str, data, params: dict | None = None) -> RuntimeRun:
+        """Run ANY registered grid workload: the registry's
+        :class:`~repro.workflow.registry.WorkloadSpec` resolves the params,
+        builds the SiteJob DAG and names the terminal job; this method
+        supplies the runtime context (count backend, kernel toggle, sync
+        strategy) and the engine.  The ``run_vclustering``/``run_gfm``/
+        ``run_fdm`` methods are thin wrappers over this — a workload
+        registered through the registry needs NO runtime change."""
+        spec = get_workload(app)
+        if spec.runner != "grid":
+            raise ValueError(
+                f"app {app!r} is a {spec.runner!r} workload, not a grid DAG; "
+                "serve it through launch.serve.MiningService"
+            )
+        p = spec.resolve(params)
+        measured: dict[str, float] = {}
+        ctx = RunContext(
+            measured=measured,
+            count_backend=self.count_backend,
+            use_kernel=self.use_kernel,
+            cluster_sync=self._cluster_sync,
+        )
+        jobs, mode = spec.build_jobs(data, p, ctx)
+        rep, results = self.engine.run_site_jobs(jobs, name=spec.name)
+        return self._finish_run(jobs, rep, results[spec.terminal], measured, mode)
+
     def run_vclustering(
         self, key: jax.Array, xs, cfg: VClusterConfig | None = None
     ) -> RuntimeRun:
@@ -279,12 +302,7 @@ class GridRuntime:
         perturbation, scheduled through the grid engine."""
         if cfg is None:
             cfg = VClusterConfig(use_kernel=self.use_kernel)
-        xs = jnp.asarray(xs)
-        measured: dict[str, float] = {}
-        sync, mode = self._cluster_sync(xs.shape[0], cfg)
-        jobs = vcluster_site_jobs(key, xs, cfg, sync=sync, measured=measured)
-        rep, results = self.engine.run_site_jobs(jobs, name="vclustering")
-        return self._finish_run(jobs, rep, results["collect"], measured, mode)
+        return self.run("vclustering", xs, {"key": key, "cfg": cfg})
 
     def run_gfm(
         self, sites, k: int, minsup: float, local_minsup: float | None = None
@@ -292,20 +310,11 @@ class GridRuntime:
         """Algorithm 2 end-to-end: per-site local Apriori (Pallas support
         counting by default), then the single 2-pass synchronization and
         top-down descent, scheduled through the grid engine."""
-        measured: dict[str, float] = {}
-        jobs = gfm_site_jobs(
-            sites, k, minsup,
-            backend=self.count_backend,
-            local_minsup=local_minsup,
-            measured=measured,
+        return self.run(
+            "gfm", sites, {"k": k, "minsup": minsup, "local_minsup": local_minsup}
         )
-        rep, results = self.engine.run_site_jobs(jobs, name="gfm")
-        return self._finish_run(jobs, rep, results["decide"], measured, "host")
 
     def run_fdm(self, sites, k: int, minsup: float) -> RuntimeRun:
         """FDM baseline through the same scheduler (k level-synchronous
         rounds) — the comparison the paper draws against GFM."""
-        measured: dict[str, float] = {}
-        jobs = fdm_site_jobs(sites, k, minsup, backend=self.count_backend, measured=measured)
-        rep, results = self.engine.run_site_jobs(jobs, name="fdm")
-        return self._finish_run(jobs, rep, results["collect"], measured, "host")
+        return self.run("fdm", sites, {"k": k, "minsup": minsup})

@@ -92,6 +92,15 @@ class TenantQueues:
     converges to w_i / sum(w) — and with uniform weights the picks per
     cycle differ by at most one across tenants (the bound
     ``tests/test_service.py`` and the CI smoke assert).
+
+    Burst grants are integer pick counts, so the ratio contract only
+    holds when every weight is >= 1 (a weight of 0.5 would otherwise
+    round up to the same one-pick-per-cycle as weight 1).  Fractional
+    weight maps are therefore NORMALIZED at construction: when the
+    smallest weight is below 1, every weight is divided by it, which
+    preserves the ratios exactly — ``{a: 1, b: 0.5}`` grants the same
+    2:1 shares as ``{a: 2, b: 1}``.  Tenants absent from the map keep
+    weight 1.0, i.e. they share like the smallest-weighted tenant.
     """
 
     def __init__(self, max_depth: int = 64, weights: dict[str, float] | None = None):
@@ -102,6 +111,10 @@ class TenantQueues:
         for t, w in self.weights.items():
             if w <= 0:
                 raise ValueError(f"tenant {t!r} weight must be > 0, got {w}")
+        if self.weights:
+            smallest = min(self.weights.values())
+            if smallest < 1.0:
+                self.weights = {t: w / smallest for t, w in self.weights.items()}
         self._queues: OrderedDict[str, deque[MiningRequest]] = OrderedDict()
         self._cursor = 0  # index into first-seen tenant order
         self._burst = 0  # picks granted to the cursor tenant this cycle

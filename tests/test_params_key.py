@@ -1,0 +1,126 @@
+"""Property tests for ``runtime.cache.params_key`` — the canonicalization
+that coalescing and result-cache keying stand on.
+
+Properties pinned here:
+  * **totality** over JSON-ish values — nested dicts/lists/tuples/sets,
+    bools, strings, ints, and floats INCLUDING ``inf``/``-inf``/``nan``
+    (the pre-fix ``_canon`` crashed with OverflowError/ValueError on
+    them, which let one malformed request kill the service dispatch
+    loop);
+  * **canonical equality** — logically identical params (reordered dict
+    keys, list vs tuple spelling, integral floats vs ints, any nan
+    object) always map to EQUAL, hashable keys;
+  * **determinism** — the same value canonicalizes identically across
+    calls (set iteration order does not leak into the key).
+
+Runs under real hypothesis when installed (CI) and under the
+deterministic ``repro.testing`` fallback otherwise: the random structure
+is derived from a drawn integer seed, so both paths exercise the same
+generator.
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from repro.testing import given, settings, strategies as st
+
+from repro.runtime.cache import ResultCache, params_key
+
+_SPECIALS = (math.inf, -math.inf, math.nan)
+
+
+def _rand_value(rng: np.random.Generator, depth: int = 0):
+    """One random JSON-ish value, with non-finite floats in the mix."""
+    kinds = 8 if depth < 3 else 5  # cap nesting
+    k = int(rng.integers(kinds))
+    if k == 0:
+        return int(rng.integers(-10_000, 10_000))
+    if k == 1:
+        return float(rng.normal() * 10)
+    if k == 2:
+        return _SPECIALS[int(rng.integers(3))]
+    if k == 3:
+        return bool(rng.integers(2))
+    if k == 4:
+        return f"s{int(rng.integers(50))}"
+    if k == 5:
+        return [_rand_value(rng, depth + 1) for _ in range(int(rng.integers(4)))]
+    if k == 6:
+        return {f"k{i}": _rand_value(rng, depth + 1) for i in range(int(rng.integers(4)))}
+    return {int(rng.integers(20)) for _ in range(int(rng.integers(4)))}
+
+
+def _rand_params(rng: np.random.Generator) -> dict:
+    return {f"p{i}": _rand_value(rng) for i in range(int(rng.integers(1, 6)))}
+
+
+def _respell(v, rng: np.random.Generator):
+    """A logically-identical respelling: reordered dict keys, list<->tuple,
+    small exact ints as floats, fresh nan objects, reshuffled sets."""
+    if isinstance(v, dict):
+        keys = list(v)
+        rng.shuffle(keys)
+        return {k: _respell(v[k], rng) for k in keys}
+    if isinstance(v, list):
+        return tuple(_respell(x, rng) for x in v)
+    if isinstance(v, tuple):
+        return [_respell(x, rng) for x in v]
+    if isinstance(v, (set, frozenset)):
+        items = list(v)
+        rng.shuffle(items)
+        return frozenset(items) if isinstance(v, set) else set(items)
+    if isinstance(v, float) and math.isnan(v):
+        return float("nan")  # a DIFFERENT nan object, same meaning
+    if isinstance(v, bool):
+        return v
+    if isinstance(v, int) and abs(v) < 2**52:
+        return float(v)  # exact as a double; canonicalizes back to int
+    return v
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=100_000))
+def test_params_key_total_hashable_deterministic(seed):
+    rng = np.random.default_rng(seed)
+    params = _rand_params(rng)
+    key = params_key(params)  # must never raise, non-finite floats included
+    hash(key)  # and must be usable as a cache/coalescing key
+    assert key == params_key(params)  # deterministic across calls
+    # usable in the real cache key path too
+    hash(ResultCache.key("ds", 1, "app", params))
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=100_000))
+def test_logically_identical_params_map_to_equal_keys(seed):
+    rng = np.random.default_rng(seed)
+    params = _rand_params(rng)
+    respelled = {k: _respell(v, np.random.default_rng(seed + 1)) for k, v in params.items()}
+    assert params_key(params) == params_key(respelled)
+
+
+def test_nonfinite_regression():
+    """The exact crashes from the issue: inf raised OverflowError, nan
+    raised ValueError, either killing the dispatch loop."""
+    assert params_key({"minsup": float("inf")}) == params_key({"minsup": math.inf})
+    assert params_key({"minsup": float("nan")}) == params_key({"minsup": math.nan})
+    assert params_key({"a": math.inf}) != params_key({"a": -math.inf})
+    assert params_key({"a": math.inf}) != params_key({"a": math.nan})
+    hash(params_key({"x": [math.nan, {math.inf}, {"y": -math.inf}]}))
+
+
+def test_spelling_equivalences():
+    assert params_key({"k": 3}) == params_key({"k": 3.0})
+    assert params_key({"a": 1, "b": 2}) == params_key({"b": 2, "a": 1})
+    assert params_key({"xs": [1, 2]}) == params_key({"xs": (1, 2)})
+    assert params_key({"s": {3, 1, 2}}) == params_key({"s": frozenset({2, 3, 1})})
+    assert params_key({"k": 3}) != params_key({"k": 3.5})
+    assert params_key(None) == params_key({})
+    # bools stay distinct from ints where Python hashes collide
+    assert params_key({"flag": True}) == params_key({"flag": True})

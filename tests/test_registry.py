@@ -1,0 +1,272 @@
+"""Workload plugin registry: the one seam every consumer derives from.
+
+Covers the registry contract itself (validation, schemas, coercion), the
+equivalence of the legacy ``run_*`` wrappers with the generic
+``GridRuntime.run``, the registry-added workloads (count-distribution
+Apriori, streaming top-k) end-to-end through inline AND batched backends
+and through ``MiningService`` requests, and the single-source-of-truth
+properties the serving layer's two old "unknown app" sites used to
+drift on."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.apriori import DeltaApriori, bruteforce_frequent, topk_itemsets
+from repro.core.cdapriori import cd_mine
+from repro.core.fdm import fdm_mine
+from repro.data.synthetic import ibm_transactions
+from repro.launch.serve import APPS, MiningService
+from repro.runtime.conformance import (
+    _K_ITEMSETS,
+    _MINSUP,
+    conformance_cell,
+    make_inputs,
+    result_digest,
+    run_app,
+)
+from repro.workflow.registry import (
+    Param,
+    app_names,
+    app_table_markdown,
+    conformance_apps,
+    get_workload,
+    validate_registry,
+    workloads,
+)
+
+# ---------------------------------------------------------------------------
+# Registry contract
+# ---------------------------------------------------------------------------
+
+
+def test_registry_fully_specified():
+    """Every registered workload declares a complete spec — the same
+    check tools/check_registry.py gates in CI."""
+    assert validate_registry() == []
+
+
+def test_registry_contains_the_family():
+    names = app_names()
+    for expected in ("apriori", "gfm", "fdm", "kmeans", "vclustering",
+                     "cd_apriori", "topk"):
+        assert expected in names
+    assert set(conformance_apps()) == {"vclustering", "gfm", "fdm", "cd_apriori"}
+
+
+def test_unknown_app_error_names_the_family():
+    with pytest.raises(ValueError, match="unknown app"):
+        get_workload("word2vec")
+
+
+def test_param_coercion_and_defaults():
+    spec = get_workload("gfm")
+    p = spec.resolve({"k": "4", "minsup": "0.2"})
+    assert p["k"] == 4 and isinstance(p["k"], int)
+    assert p["minsup"] == pytest.approx(0.2)
+    assert p["split_seed"] == 0 and p["n_sites"] is None
+    with pytest.raises(ValueError, match="no param"):
+        spec.resolve({"bogus": 1})
+    with pytest.raises(ValueError, match="expects int"):
+        spec.resolve({"k": 2.5})
+
+
+def test_validate_submitted_rejects_internal_and_nonfinite():
+    spec = get_workload("vclustering")
+    ok = spec.validate_submitted({"k_local": 4, "iters": 8})
+    assert ok == {"k_local": 4, "iters": 8}
+    with pytest.raises(ValueError, match="does not accept"):
+        spec.validate_submitted({"key": jax.random.PRNGKey(0)})  # internal
+    mine = get_workload("apriori")
+    for bad in (float("inf"), float("-inf"), float("nan")):
+        with pytest.raises(ValueError, match="non-finite"):
+            mine.validate_submitted({"minsup": bad})
+    with pytest.raises(ValueError, match="non-finite"):
+        mine.validate_submitted({"min_count": math.inf})
+
+
+def test_app_table_markdown_lists_every_app():
+    table = app_table_markdown()
+    for spec in workloads():
+        assert f"`{spec.name}`" in table
+
+
+# ---------------------------------------------------------------------------
+# One source of truth: serve-side validation == registry
+# ---------------------------------------------------------------------------
+
+
+def _service(n_items: int = 10) -> MiningService:
+    svc = MiningService(count_backend="jnp", use_kernel=False, n_sites=2)
+    svc.register_dataset("tx", "transactions", n_items=n_items)
+    svc.register_dataset("pts", "points", dim=2)
+    svc.append_transactions("tx", ibm_transactions(0, 120, n_items))
+    rng = np.random.default_rng(0)
+    svc.append_points("pts", rng.normal(size=(90, 2)).astype(np.float32))
+    return svc
+
+
+def test_submit_validated_set_equals_registered_set():
+    """serve.APPS IS the registry — the two old hand-maintained app lists
+    (submit's tuple and _execute's if/elif chain) cannot drift again."""
+    assert tuple(APPS) == app_names()
+    svc = _service()
+    for spec in workloads():
+        ds = "tx" if spec.dataset_kind == "transactions" else "pts"
+        wrong = "pts" if ds == "tx" else "tx"
+        rid = svc.submit("t", spec.name, ds, dict(spec.smoke_params[0]))
+        assert svc.poll(rid) == "queued"  # every registered app is admissible
+        with pytest.raises(ValueError, match="dataset"):
+            svc.submit("t", spec.name, wrong, dict(spec.smoke_params[0]))
+
+
+def test_execute_fallback_unreachable_for_registered_apps():
+    """Every registered app runs end-to-end through a MiningService
+    request — there is no per-app branch left in _execute to fall off
+    (the old dead-end 'unknown app' raise is structurally gone)."""
+    svc = _service()
+    rids = {}
+    for spec in workloads():
+        ds = "tx" if spec.dataset_kind == "transactions" else "pts"
+        rids[spec.name] = svc.submit("t", spec.name, ds, dict(spec.smoke_params[0]))
+    svc.drain()
+    for name, rid in rids.items():
+        assert svc.poll(rid) == "done", (name, svc.request(rid).error)
+
+
+def test_new_workloads_through_service_with_accounting():
+    """The registry-added apps keep cache/coalescing accounting intact:
+    identical concurrent requests coalesce into one execution, repeats
+    after completion are cache hits."""
+    svc = _service()
+    a = svc.submit("t0", "cd_apriori", "tx", {"k": 2, "minsup": 0.3})
+    b = svc.submit("t1", "cd_apriori", "tx", {"k": 2, "minsup": 0.3})
+    svc.step()
+    assert svc.request(b).coalesced_into == a
+    assert svc.executions == 1 and svc.coalesced == 1
+    c = svc.submit("t2", "cd_apriori", "tx", {"k": 2, "minsup": 0.3})
+    t = svc.submit("t2", "topk", "tx", {"k": 2, "top": 5})
+    svc.step()
+    assert svc.request(c).cache_hit and svc.request(c).backend == "cache"
+    assert svc.poll(t) == "done" and not svc.request(t).cache_hit
+    t2 = svc.submit("t0", "topk", "tx", {"k": 2, "top": 5})
+    svc.step()
+    assert svc.request(t2).cache_hit
+    assert svc.executions == 2  # one cd_apriori + one topk
+
+
+# ---------------------------------------------------------------------------
+# Generic run == legacy wrappers; new apps across execution backends
+# ---------------------------------------------------------------------------
+
+
+def test_wrappers_equal_generic_run():
+    """run_vclustering/run_gfm/run_fdm are thin wrappers over the generic
+    registry-backed run: bit-identical digests either way."""
+    from repro.core.vclustering import VClusterConfig
+    from repro.runtime.gridruntime import GridRuntime
+
+    xs, dbs = make_inputs(3)
+    cfg = VClusterConfig(k_local=3, kmeans_iters=5, use_kernel=False)
+    for app, call, params in (
+        ("gfm", lambda rt: rt.run_gfm(dbs, _K_ITEMSETS, _MINSUP),
+         {"k": _K_ITEMSETS, "minsup": _MINSUP}),
+        ("fdm", lambda rt: rt.run_fdm(dbs, _K_ITEMSETS, _MINSUP),
+         {"k": _K_ITEMSETS, "minsup": _MINSUP}),
+        ("vclustering", lambda rt: rt.run_vclustering(jax.random.PRNGKey(0), xs, cfg),
+         {"key": jax.random.PRNGKey(0), "cfg": cfg}),
+    ):
+        rt = GridRuntime(backend="inline", sync="pooled", use_kernel=False,
+                         count_backend="jnp")
+        legacy = result_digest(app, call(rt))
+        data = xs if app == "vclustering" else dbs
+        generic = result_digest(app, rt.run(app, data, params))
+        assert legacy == generic, app
+    # the wrapper's no-cfg default is the paper config (k_local=20), NOT
+    # the service default — pinned so the registry defaults can't drift it
+    run = GridRuntime(backend="inline", sync="pooled", use_kernel=False,
+                      count_backend="jnp").run_vclustering(jax.random.PRNGKey(0), xs)
+    assert run.result.merged.labels.shape[0] == len(xs) * 20  # s * k_local slots
+
+
+def test_generic_run_rejects_local_workloads():
+    from repro.runtime.gridruntime import GridRuntime
+
+    rt = GridRuntime(backend="inline", sync="pooled", use_kernel=False,
+                     count_backend="jnp")
+    with pytest.raises(ValueError, match="local"):
+        rt.run("apriori", None, {})
+
+
+def test_cd_apriori_inline_batched_bit_identical():
+    """The registry-added grid workload satisfies the conformance
+    contract: inline and batched digests AND fingerprints match."""
+    for schedule in ("staged", "async"):
+        cell_in = conformance_cell("cd_apriori", 4, schedule, "inline")
+        cell_ba = conformance_cell("cd_apriori", 4, schedule, "batched")
+        assert cell_in["digest"] == cell_ba["digest"]
+        assert cell_in["fingerprint"] == cell_ba["fingerprint"]
+
+
+def test_cd_apriori_matches_oracles():
+    """SiteJob decomposition == in-process cd_mine == bruteforce counts,
+    and the frequents agree with FDM over the same sites (same global
+    threshold, different protocol)."""
+    xs, dbs = make_inputs(4)
+    run = run_app("cd_apriori", 4, "staged", "inline")
+    oracle = cd_mine(dbs, _K_ITEMSETS, _MINSUP, backend="jnp")
+    spec = get_workload("cd_apriori")
+    assert spec.digest(run.result) == spec.digest(oracle)
+    n_total = sum(db.n_tx for db in dbs)
+    dense = ibm_transactions(seed=2, n_tx=n_total, n_items=dbs[0].n_items,
+                             avg_tx_len=5, n_patterns=4)
+    g_min = int(np.ceil(_MINSUP * n_total))
+    assert dict(bruteforce_frequent(dense, _K_ITEMSETS, g_min)) == dict(oracle.frequent)
+    fdm = fdm_mine(dbs, _K_ITEMSETS, _MINSUP, backend="jnp")
+    assert dict(fdm.frequent) == dict(oracle.frequent)
+    # CD ledger: one count-vector exchange per level, every site counts
+    assert oracle.comm.rounds == len([c for c in oracle.per_level_candidates if c])
+
+
+def test_topk_matches_bruteforce_ranking():
+    n_items = 10
+    dense = ibm_transactions(3, 150, n_items, avg_tx_len=4, n_patterns=3)
+    delta = DeltaApriori(n_items, backend="jnp")
+    delta.append(dense)
+    res = topk_itemsets(delta, 2, 7)
+    counts = dict(bruteforce_frequent(dense, 2, 1))
+    best = sorted(counts.items(), key=lambda ic: (-ic[1], len(ic[0]), ic[0]))[:7]
+    assert res.items == best
+    assert all(c >= res.threshold for _, c in res.items)
+    # served again from the same delta state: no new device passes
+    res2 = topk_itemsets(delta, 2, 7)
+    assert res2.items == res.items and res2.count_calls == 0
+
+
+def test_registering_requires_unique_names():
+    from repro.workflow.registry import WorkloadSpec, register
+
+    spec = get_workload("gfm")
+    with pytest.raises(ValueError, match="already registered"):
+        register(spec)
+    # and Param kinds are validated through validate_registry on a bad spec
+    bad = WorkloadSpec(
+        name="", dataset_kind="nope", runner="nope", description="",
+        params=(Param("x", "complex"),), result_fields=(), digest=None,
+    )
+    from repro.workflow import registry as reg
+
+    reg._REGISTRY["__bad__"] = bad
+    try:
+        problems = validate_registry()
+        assert any("bad dataset_kind" in p for p in problems)
+        assert any("bad runner" in p for p in problems)
+        assert any("bad kind" in p for p in problems)
+        assert any("result schema" in p for p in problems)
+    finally:
+        del reg._REGISTRY["__bad__"]
+    assert validate_registry() == []

@@ -17,6 +17,7 @@ except ImportError:
 
 from repro.core.apriori import concat_dbs, local_apriori
 from repro.launch.serve import MiningService, fairness_violations
+from repro.workflow.registry import workloads
 from repro.workflow.requests import QueueFullError, TenantQueues
 
 
@@ -177,9 +178,34 @@ def test_weighted_fairness_shares():
     assert q.pick() is None
 
 
+def test_fractional_weights_honor_ratios():
+    """Weights below 1 are normalized at construction (divide by the
+    smallest), so {big: 1, small: 0.5} grants the SAME 2:1 shares as
+    {big: 2, small: 1} — fractional weights are no longer silently
+    rounded up to one pick per cycle."""
+    q = TenantQueues(max_depth=32, weights={"big": 1.0, "small": 0.5})
+    assert q.weights == {"big": 2.0, "small": 1.0}
+    from repro.workflow.requests import MiningRequest
+
+    for i in range(6):
+        q.push(MiningRequest(request_id=i, tenant="big", app="apriori", dataset="d"))
+    for i in range(3):
+        q.push(MiningRequest(request_id=100 + i, tenant="small", app="apriori", dataset="d"))
+    picks = [q.pick().tenant for _ in range(9)]
+    assert picks == ["big", "big", "small"] * 3
+    assert q.pick() is None
+    # weights >= 1 are untouched; non-positive weights still rejected
+    assert TenantQueues(weights={"a": 3.0, "b": 1.0}).weights == {"a": 3.0, "b": 1.0}
+    with pytest.raises(ValueError, match="must be > 0"):
+        TenantQueues(weights={"a": 0.0})
+
+
 def test_failed_request_does_not_kill_service():
+    # n_sites=0 passes submit-time validation (a finite int) but blows up
+    # at execution when the dataset is split — the "one bad request must
+    # not kill the service" guard in _step
     svc = _service()
-    bad = svc.submit("a", "apriori", "tx", {"k": 2, "min_count": "not-a-number"})
+    bad = svc.submit("a", "gfm", "tx", {"k": 2, "minsup": 0.3, "n_sites": 0})
     ok = svc.submit("b", "apriori", "tx", {"k": 2, "minsup": 0.3})
     done = svc.step(max_requests=4)
     assert sorted(done) == sorted([bad, ok])
@@ -188,6 +214,30 @@ def test_failed_request_does_not_kill_service():
         svc.result(bad)
     assert svc.poll(ok) == "done"
     assert svc.ledger()["per_tenant"]["a"]["failed"] == 1
+
+
+def test_malformed_params_rejected_at_submit():
+    """Non-finite and uncoercible params are LEDGERED rejections at
+    submit — the params_key crash class (inf/nan killing the dispatch
+    loop) is unreachable from a tenant request."""
+    svc = _service()
+    with pytest.raises(ValueError, match="non-finite"):
+        svc.submit("a", "apriori", "tx", {"minsup": float("inf")})
+    with pytest.raises(ValueError, match="non-finite"):
+        svc.submit("a", "apriori", "tx", {"minsup": float("nan")})
+    with pytest.raises(ValueError, match="expects int"):
+        svc.submit("a", "apriori", "tx", {"min_count": "not-a-number"})
+    with pytest.raises(ValueError, match="does not accept param"):
+        svc.submit("a", "apriori", "tx", {"bogus": 1})
+    led = svc.ledger()
+    assert led["rejected"] == 4
+    rejected = [r for r in led["requests"] if r["status"] == "rejected"]
+    assert len(rejected) == 4 and all(r["error"] for r in rejected)
+    assert led["per_tenant"]["a"]["rejected"] == 4
+    # the dispatch loop is unharmed: a well-formed request still runs
+    ok = svc.submit("a", "apriori", "tx", {"k": 2, "minsup": 0.3})
+    assert svc.step() == [ok]
+    assert svc.poll(ok) == "done"
 
 
 def test_kmeans_warm_start_across_versions():
@@ -208,23 +258,41 @@ def test_kmeans_warm_start_across_versions():
     assert np.isfinite(float(res2.inertia)) and float(res1.inertia) >= 0.0
 
 
+def _registry_tx_pool(n_sites: int) -> list[tuple[str, dict]]:
+    """Every registered transactions workload's smoke params — the mixed
+    trace is parametrized off the registry, so a newly registered app is
+    exercised here with NO test change."""
+    pool: list[tuple[str, dict]] = []
+    for spec in workloads():
+        if spec.dataset_kind != "transactions":
+            continue
+        for smoke in spec.smoke_params:
+            params = dict(smoke)
+            if spec.runner == "grid":
+                params["n_sites"] = n_sites
+            pool.append((spec.name, params))
+    return pool
+
+
 def test_mixed_tenant_trace_ledger():
     """A small mixed-tenant burst trace end-to-end on the batched
-    backend: everything completes, repeats hit the cache, identical
+    backend, drawing every registered transactions app from the registry
+    smoke params: everything completes, repeats hit the cache, identical
     concurrent requests coalesce, the fairness bound holds, and the
     ledger is JSON-serializable."""
     svc = _service()
     tenants = ["t0", "t1", "t2"]
-    pool = [
-        {"k": 3, "minsup": 0.2},
-        {"k": 2, "minsup": 0.3},
-        {"k": 2, "minsup": 0.4},
-    ]
+    pool = _registry_tx_pool(n_sites=2)
+    assert {app for app, _ in pool} == {
+        s.name for s in workloads() if s.dataset_kind == "transactions"
+    }
     rng = np.random.default_rng(7)
     for burst in range(3):
         for t in tenants:
-            svc.submit(t, "apriori", "tx", pool[0])  # shared → coalesce fodder
-            svc.submit(t, "apriori", "tx", pool[int(rng.integers(len(pool)))])
+            app, params = pool[burst % len(pool)]  # shared → coalesce fodder
+            svc.submit(t, app, "tx", params)
+            app, params = pool[int(rng.integers(len(pool)))]
+            svc.submit(t, app, "tx", params)
         svc.drain(max_requests=6)
         if burst == 1:
             svc.append_transactions("tx", _tx_batch(burst + 10, n_tx=20))

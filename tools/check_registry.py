@@ -1,0 +1,57 @@
+#!/usr/bin/env python
+"""CI gate: every registered workload must be fully specified.
+
+Runs ``repro.workflow.registry.validate_registry`` — param schema with
+docs, result schema, digest, runner wiring (grid builders or local_fn),
+and valid smoke params for every registered ``WorkloadSpec`` — so an
+under-specified workload plugin fails the build instead of a tenant
+request.  ``--table`` prints the registry-generated markdown app table
+(the README/docs tables are regenerated from it, never hand-edited).
+
+    PYTHONPATH=src python tools/check_registry.py
+"""
+
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+from repro.workflow.registry import (  # noqa: E402 — after sys.path setup
+    app_names,
+    app_table_markdown,
+    conformance_apps,
+    validate_registry,
+    workloads,
+)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--table", action="store_true",
+                    help="print the registry's markdown app table and exit")
+    args = ap.parse_args(argv)
+
+    if args.table:
+        print(app_table_markdown())
+        return 0
+
+    problems = validate_registry()
+    for p in problems:
+        print(f"check_registry: {p}", file=sys.stderr)
+    if problems:
+        print(f"check_registry: {len(problems)} problem(s)", file=sys.stderr)
+        return 1
+    n = len(workloads())
+    print(
+        f"check_registry: {n} workloads fully specified "
+        f"({', '.join(app_names())}); conformance matrix: "
+        f"{', '.join(conformance_apps())}"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
