@@ -186,6 +186,9 @@ def main() -> None:
         "process executes only its owned sites and ships results)",
     )
     args = ap.parse_args()
+    from repro.launch.mesh import tuned_platform
+
+    tuned_platform()  # apply the tuned XLA flag set (GPU) before first use
     run(
         smoke=args.smoke,
         out=args.out,

@@ -184,6 +184,7 @@ def compare_kernels(
     baseline: dict,
     candidate: dict,
     tol_kernels: float = 1.0,
+    tol_autotune: float = 0.25,
 ) -> tuple[list[str], list[str]]:
     """Kernel microbench gate: per-kernel median seconds vs the committed
     ``BENCH_kernels_baseline.json``.
@@ -195,7 +196,16 @@ def compare_kernels(
     an order of magnitude and still trips it — which is the regression
     class end-to-end wall time hides behind scheduler noise.  Coverage is
     strict as everywhere else: a kernel present in the baseline must
-    appear in the candidate."""
+    appear in the candidate.
+
+    Autotune invariant: every CANDIDATE row carrying both
+    ``seconds_tuned`` and ``seconds_default`` (the ``*_autotune`` rows
+    ``bench_kernels --autotune`` emits) must satisfy ``tuned <= default``
+    within ``tol_autotune`` — the autotuner keeps the default unless a
+    candidate wins beyond its noise margin, so a tuned config that LOSES
+    to the default by more than measurement noise means the search or
+    the memo key broke.  Both sides are measured back-to-back in one
+    process, so the band (default 25%) is host-noise only."""
     failures: list[str] = []
     notes: list[str] = []
     base = {c["name"]: c for c in baseline.get("kernels", [])}
@@ -216,6 +226,16 @@ def compare_kernels(
                 f"kernel {name}: improved {bs * 1e6:.1f}us -> {cs * 1e6:.1f}us "
                 f"— refresh the kernels baseline"
             )
+    for name, c in sorted(cand.items()):
+        if "seconds_tuned" not in c or "seconds_default" not in c:
+            continue
+        t, d = float(c["seconds_tuned"]), float(c["seconds_default"])
+        if t > d * (1 + tol_autotune) + 1e-4:
+            failures.append(
+                f"kernel {name}: tuned config LOST to default "
+                f"({t * 1e6:.1f}us > {d * 1e6:.1f}us, tolerance {tol_autotune:.0%}) "
+                f"— autotune search/memo is broken"
+            )
     return failures, notes
 
 
@@ -224,8 +244,8 @@ def compare_kernels(
 REGEN = {
     "baseline": "PYTHONPATH=src python -m benchmarks.bench_sweep --smoke --out {path}",
     "candidate": "PYTHONPATH=src python -m benchmarks.bench_sweep --smoke --out {path}",
-    "kernels baseline": "PYTHONPATH=src python -m benchmarks.bench_kernels --out {path}",
-    "kernels candidate": "PYTHONPATH=src python -m benchmarks.bench_kernels --out {path}",
+    "kernels baseline": "PYTHONPATH=src python -m benchmarks.bench_kernels --autotune --smoke --out {path}",
+    "kernels candidate": "PYTHONPATH=src python -m benchmarks.bench_kernels --autotune --smoke --out {path}",
 }
 
 
@@ -258,6 +278,7 @@ def main() -> int:
     ap.add_argument("--kernels-baseline", default=None)
     ap.add_argument("--kernels-candidate", default=None)
     ap.add_argument("--tol-kernels", type=float, default=1.0)
+    ap.add_argument("--tol-autotune", type=float, default=0.25)
     args = ap.parse_args()
 
     baseline = _load(args.baseline, "baseline")
@@ -274,7 +295,9 @@ def main() -> int:
     if args.kernels_baseline and args.kernels_candidate:
         kb = _load(args.kernels_baseline, "kernels baseline")
         kc = _load(args.kernels_candidate, "kernels candidate")
-        kfail, knotes = compare_kernels(kb, kc, tol_kernels=args.tol_kernels)
+        kfail, knotes = compare_kernels(
+            kb, kc, tol_kernels=args.tol_kernels, tol_autotune=args.tol_autotune
+        )
         failures.extend(kfail)
         notes.extend(knotes)
         n_kernels = len(kb.get("kernels", []))

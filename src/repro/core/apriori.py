@@ -106,6 +106,32 @@ def count_supports(
     return np.concatenate(outs).astype(np.int64)
 
 
+def count_supports_prune(
+    db: TransactionDB,
+    itemsets: Sequence[Itemset],
+    min_count: int,
+    backend: str = "jnp",
+    block_c: int = 512,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Counts AND the ``>= min_count`` frequent mask for one site's level
+    in a single pass — ``(counts (C,) int64, frequent (C,) bool)`` with
+    ``frequent == counts >= min_count`` exactly.  On the kernel backend
+    the threshold is fused into the device pass
+    (``ops.support_count_prune``), so the level loop's hygiene step stops
+    being a host round-trip of the raw count vector; the jnp oracle
+    thresholds on host behind the identical signature."""
+    if not itemsets:
+        return np.zeros((0,), dtype=np.int64), np.zeros((0,), dtype=bool)
+    if backend == "kernel":
+        from repro.kernels import ops
+
+        masks_np = pack_itemsets(itemsets, db.n_items)
+        cnt, freq = ops.support_count_prune(db.packed, jnp.asarray(masks_np), int(min_count))
+        return np.asarray(cnt, dtype=np.int64), np.asarray(freq)
+    sup = count_supports(db, itemsets, backend=backend, block_c=block_c)
+    return sup, sup >= int(min_count)
+
+
 def _cand_bucket(n: int, step: int = 64) -> int:
     """Round a candidate count up to a bucket so the fused counting jit
     compiles O(log) distinct shapes instead of one per level."""
@@ -171,6 +197,60 @@ def fused_count_sites(
         counts = np.asarray(_count_block_sites(jnp.asarray(tx_s), jnp.asarray(masks_s)))
     for row, i in enumerate(live):
         out[i] = counts[row, : len(lists[i])].astype(np.int64)
+    return out
+
+
+def fused_prune_sites(
+    dbs: Sequence[TransactionDB],
+    itemset_lists: Sequence[Sequence[Itemset]],
+    min_counts: Sequence[int],
+    backend: str = "jnp",
+) -> list[tuple[np.ndarray, np.ndarray]]:
+    """The prune-fused form of :func:`fused_count_sites`: one device
+    dispatch counts every site's own candidate list AND thresholds it
+    against that site's ``min_counts[i]`` (a per-site traced operand, so
+    heterogeneous thresholds ride the same launch).  Returns one
+    ``(counts (C_i,) int64, frequent (C_i,) bool)`` pair per site, with
+    ``counts`` exactly equal to ``fused_count_sites`` and ``frequent ==
+    counts >= min_counts[i]``.  Same padding rules and heterogeneous-
+    universe fallback as the count-only form."""
+    lists = [list(lst) for lst in itemset_lists]
+    if len(dbs) != len(lists):
+        raise ValueError(f"{len(dbs)} sites but {len(lists)} candidate lists")
+    if len(dbs) != len(min_counts):
+        raise ValueError(f"{len(dbs)} sites but {len(min_counts)} thresholds")
+    empty = (np.zeros((0,), dtype=np.int64), np.zeros((0,), dtype=bool))
+    live = [i for i, lst in enumerate(lists) if lst]
+    out: list[tuple[np.ndarray, np.ndarray]] = [empty] * len(lists)
+    if not live:
+        return out
+    widths = {n_words(dbs[i].n_items) for i in live}
+    if len(widths) != 1:
+        for i in live:
+            out[i] = count_supports_prune(dbs[i], lists[i], min_counts[i], backend=backend)
+        return out
+    w = widths.pop()
+    n_max = max(dbs[i].n_tx for i in live)
+    c_max = _cand_bucket(max(len(lists[i]) for i in live))
+    tx_s = np.zeros((len(live), n_max, w), dtype=np.uint32)
+    masks_s = np.zeros((len(live), c_max, w), dtype=np.uint32)
+    mc = np.asarray([int(min_counts[i]) for i in live], dtype=np.int32)
+    for row, i in enumerate(live):
+        tx_s[row, : dbs[i].n_tx] = np.asarray(dbs[i].packed)
+        masks_s[row, : len(lists[i])] = pack_itemsets(lists[i], dbs[i].n_items)
+    if backend == "kernel":
+        from repro.kernels import ops
+
+        counts, freq = ops.support_count_prune_sites(
+            jnp.asarray(tx_s), jnp.asarray(masks_s), jnp.asarray(mc)
+        )
+        counts, freq = np.asarray(counts), np.asarray(freq)
+    else:
+        counts = np.asarray(_count_block_sites(jnp.asarray(tx_s), jnp.asarray(masks_s)))
+        freq = counts >= mc[:, None]
+    for row, i in enumerate(live):
+        c_i = len(lists[i])
+        out[i] = (counts[row, :c_i].astype(np.int64), freq[row, :c_i])
     return out
 
 
@@ -256,12 +336,12 @@ def local_apriori(
         if not cands:
             frequent[level] = []
             break
-        sup = count_supports(db, cands, backend=backend)
+        sup, freq = count_supports_prune(db, cands, min_count, backend=backend)
         calls += 1
         n_cand += len(cands)
         for its, c in zip(cands, sup):
             counts[its] = int(c)
-        frequent[level] = [its for its, c in zip(cands, sup) if c >= min_count]
+        frequent[level] = [its for its, f in zip(cands, freq) if f]
     for lv in range(1, k_max + 1):
         frequent.setdefault(lv, [])
     return LocalMineResult(counts=counts, frequent=frequent, count_calls=calls, candidates_counted=n_cand)
@@ -309,7 +389,7 @@ def batched_local_apriori(
                 continue
             cands_by[i] = apriori_join(res[i].frequent[level])
         level += 1
-        sups = fused_count_sites(dbs, cands_by, backend=backend)
+        sups = fused_prune_sites(dbs, cands_by, min_counts, backend=backend)
         for i in list(active):
             cands = cands_by[i]
             if not cands:
@@ -318,11 +398,10 @@ def batched_local_apriori(
                 continue
             res[i].count_calls += 1
             res[i].candidates_counted += len(cands)
-            for its, c in zip(cands, sups[i]):
+            cnt_i, freq_i = sups[i]
+            for its, c in zip(cands, cnt_i):
                 res[i].counts[its] = int(c)
-            res[i].frequent[level] = [
-                its for its, c in zip(cands, sups[i]) if c >= min_counts[i]
-            ]
+            res[i].frequent[level] = [its for its, f in zip(cands, freq_i) if f]
     for lm in res:
         for lv in range(1, k_max + 1):
             lm.frequent.setdefault(lv, [])
@@ -501,8 +580,23 @@ class DeltaApriori:
             if not cands:
                 frequent[level] = []
                 break
-            self._count_new([its for its in cands if its not in self._counts])
+            fresh = [its for its in cands if its not in self._counts]
             n_cand += len(cands)
+            if fresh and len(fresh) == len(cands):
+                # cold level (every candidate is new — the first query on
+                # freshly appended data): one fused count+threshold pass
+                # serves counts AND frequents, instead of a count pass
+                # plus a host threshold sweep
+                cnt, freq = count_supports_prune(
+                    self.stream(), cands, min_count, backend=self.backend
+                )
+                self.count_calls += 1
+                for its, c in zip(cands, cnt):
+                    self._counts[its] = int(c)
+                    counts[its] = int(c)
+                frequent[level] = [its for its, f in zip(cands, freq) if f]
+                continue
+            self._count_new(fresh)
             for its in cands:
                 counts[its] = self._counts[its]
             frequent[level] = [its for its in cands if counts[its] >= min_count]

@@ -1,0 +1,341 @@
+"""Deterministic block-size autotuner for the Pallas mining kernels.
+
+The two hot kernels — ``support_count_pallas`` (grid over N x C tiles)
+and ``kmeans_assign_pallas`` (grid over N tiles) — ship with block sizes
+that are educated guesses (512x512 and 256).  The right tile depends on
+the padded input shape, the dtype, and the platform actually executing
+(TPU Mosaic vs the CPU interpreter), none of which the call site knows.
+This module closes that gap:
+
+  * a small **candidate lattice** per kernel, filtered to VMEM-feasible
+    configs for the given shape (the kernels' documented per-program
+    footprint formulas, against a conservative half-VMEM budget) and to
+    blocks that do not grossly over-pad the real extent;
+  * each surviving config is **timed with the benchmark discipline**
+    (median of ``repeats`` after ``warmup`` discarding compile, exactly
+    ``benchmarks.common.timeit``'s shape) on the real padded inputs;
+  * the winner is **memoized in-process** keyed by ``(kernel, padded
+    shape, dtype, platform)`` — padded to the 128-lane granularity, so
+    every shape that tiles identically shares one search;
+  * the table can be **persisted/loaded as JSON** so CI and the serving
+    layer reuse tuning instead of re-searching.
+
+Determinism + safety contract: candidates are enumerated in a fixed
+order, the DEFAULT config is always searched, and it stays the winner
+unless a candidate beats it by more than ``MARGIN`` (2%) — so a tuned
+config is never a noise artifact that loses to the default.  Block size
+never changes *results* (the padding semantics are part of each kernel's
+contract, property-tested in ``tests/test_autotune.py``), so autotuning
+changes speed and nothing else.
+
+The :mod:`repro.kernels.ops` wrappers consult this module when called
+with ``block="auto"`` (or when the module default is flipped via
+``ops.set_default_block`` / ``REPRO_KERNEL_BLOCKS=auto``).  Under a jit
+trace timing is impossible, so tracing callers get the memoized winner
+when one exists and the default config otherwise — tune eagerly (or load
+a persisted table) first to feed jitted paths like ``core.kmeans``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from collections.abc import Callable
+
+import jax
+
+from repro.kernels import pad_to
+
+# the hard-coded guesses the kernels shipped with — always searched, and
+# kept unless a candidate is a real (beyond-noise) improvement
+DEFAULT_SUPPORT_BLOCKS = (512, 512)
+DEFAULT_KMEANS_BLOCK = 256
+
+# conservative per-program VMEM budget: half the ~16 MB core so the
+# pipelined double-buffering of the next block always has headroom
+VMEM_BUDGET_BYTES = 8 * 1024 * 1024
+
+# full candidate lattice (lane-aligned; the min-tile rules keep every
+# entry a multiple of the 128 lane width)
+_LATTICE = (128, 256, 512, 1024)
+# tiny lattice for --smoke / CI: default + one alternative per axis, so
+# the search path is exercised every PR without costing a real sweep
+_SMOKE_LATTICE = (256, 512)
+
+MARGIN = 0.02  # a candidate must beat the default by > 2% to replace it
+
+_smoke_default = os.environ.get("REPRO_AUTOTUNE_SMOKE", "") not in ("", "0")
+
+# in-process memo: key tuple -> entry dict (see _entry below)
+_cache: dict[tuple, dict] = {}
+_hits = 0
+_misses = 0
+
+
+def set_smoke(on: bool) -> bool:
+    """Flip the module-wide tiny-lattice mode (returns the previous
+    value).  Also settable via ``REPRO_AUTOTUNE_SMOKE=1``."""
+    global _smoke_default
+    prev = _smoke_default
+    _smoke_default = bool(on)
+    return prev
+
+
+def clear_cache() -> None:
+    """Drop every memoized winner (tests / fresh searches)."""
+    global _hits, _misses
+    _cache.clear()
+    _hits = 0
+    _misses = 0
+
+
+def cache_stats() -> dict:
+    """{'entries': n, 'hits': h, 'misses': m} for the in-process memo."""
+    return {"entries": len(_cache), "hits": _hits, "misses": _misses}
+
+
+def _platform(interpret: bool) -> str:
+    return jax.default_backend() + ("+interpret" if interpret else "")
+
+
+def _timeit(fn: Callable[[], object], repeats: int = 3, warmup: int = 1) -> float:
+    """Median wall seconds — the ``benchmarks.common.timeit`` discipline
+    (warmup runs absorb compilation; the median damps host noise)."""
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+# ---------------------------------------------------------------------------
+# Candidate lattices (VMEM feasibility from the kernels' footprint docs)
+# ---------------------------------------------------------------------------
+
+
+def support_count_vmem(w: int, block_n: int, block_c: int) -> int:
+    """Per-program bytes of ``support_count_pallas``: the (W, TN) tx
+    block + (W, TC) mask block + the (TN, TC) hit tile, all 4-byte."""
+    return 4 * (w * (block_n + block_c) + block_n * block_c)
+
+
+def kmeans_assign_vmem(d: int, k: int, block_n: int) -> int:
+    """Per-program bytes of ``kmeans_assign_pallas``: the (TN, D) point
+    block + full (K, D) center set + the (TN, K) distance tile (f32)."""
+    return 4 * (block_n * d + k * d + block_n * k)
+
+
+def _axis_candidates(extent: int, lattice: tuple[int, ...]) -> list[int]:
+    """Lattice values that do not grossly over-pad ``extent``: a block
+    must not more than double the 128-padded extent (the smallest
+    lattice value is always kept so every shape has a candidate)."""
+    ceil = pad_to(max(extent, 1), 128)
+    keep = [b for b in lattice if b < 2 * ceil]
+    return keep or [min(lattice)]
+
+
+def support_count_candidates(
+    w: int, n: int, c: int, smoke: bool | None = None
+) -> list[tuple[int, int]]:
+    """Deterministically-ordered (block_n, block_c) candidates for one
+    padded support-count shape: default first, then the VMEM-feasible,
+    non-over-padding lattice points in fixed order."""
+    lattice = _SMOKE_LATTICE if (smoke if smoke is not None else _smoke_default) else _LATTICE
+    out = [DEFAULT_SUPPORT_BLOCKS]
+    for bn in _axis_candidates(n, lattice):
+        for bc in _axis_candidates(c, lattice):
+            cfg = (bn, bc)
+            if cfg in out:
+                continue
+            if support_count_vmem(w, bn, bc) <= VMEM_BUDGET_BYTES:
+                out.append(cfg)
+    return out
+
+
+def kmeans_assign_candidates(
+    n: int, d: int, k: int, smoke: bool | None = None
+) -> list[int]:
+    """Deterministically-ordered block_n candidates for one padded
+    kmeans-assign shape (default first)."""
+    lattice = _SMOKE_LATTICE if (smoke if smoke is not None else _smoke_default) else _LATTICE
+    out = [DEFAULT_KMEANS_BLOCK]
+    for bn in _axis_candidates(n, lattice):
+        if bn not in out and kmeans_assign_vmem(d, k, bn) <= VMEM_BUDGET_BYTES:
+            out.append(bn)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Keys + the search itself
+# ---------------------------------------------------------------------------
+
+
+def support_count_key(w: int, n: int, c: int, dtype, interpret: bool) -> tuple:
+    """Memo key for a support-count shape.  N/C are padded to the 128
+    granularity: every lattice block is a multiple of 128, so two shapes
+    sharing this key pad to identical extents under EVERY candidate and
+    therefore share one performance profile."""
+    return (
+        "support_count",
+        (int(w), pad_to(max(int(n), 1), 128), pad_to(max(int(c), 1), 128)),
+        str(dtype),
+        _platform(interpret),
+    )
+
+
+def kmeans_assign_key(n: int, d: int, k: int, dtype, interpret: bool) -> tuple:
+    """Memo key for a kmeans-assign shape (D/K arrive lane-padded from
+    the ops wrapper; N is padded to the 128 granularity here)."""
+    return (
+        "kmeans_assign",
+        (pad_to(max(int(n), 1), 128), int(d), int(k)),
+        str(dtype),
+        _platform(interpret),
+    )
+
+
+def _entry(kernel: str, key: tuple, config, timings: dict) -> dict:
+    """One tuned-table entry.  ``config`` is the winner; ``timings`` maps
+    the stringified config to its median seconds (default included)."""
+    default = DEFAULT_SUPPORT_BLOCKS if kernel == "support_count" else DEFAULT_KMEANS_BLOCK
+    return {
+        "kernel": kernel,
+        "shape": list(key[1]),
+        "dtype": key[2],
+        "platform": key[3],
+        "config": list(config) if isinstance(config, tuple) else config,
+        "config_default": list(default) if isinstance(default, tuple) else default,
+        "seconds_tuned": timings[str(config)],
+        "seconds_default": timings[str(default)],
+        "timings": timings,
+    }
+
+
+def _pick(timed: list[tuple[object, float]]) -> object:
+    """The winner of one search: the fastest config, except the default
+    (always ``timed[0]``) is kept unless a candidate beats it by more
+    than ``MARGIN`` — ties and noise never dethrone the default."""
+    default_cfg, default_t = timed[0]
+    best_cfg, best_t = min(timed, key=lambda ct: ct[1])
+    if best_t >= default_t * (1.0 - MARGIN):
+        return default_cfg
+    return best_cfg
+
+
+def lookup(key: tuple):
+    """The memoized winner for ``key`` or None — the only autotune entry
+    point legal under a jit trace (no timing, just the table)."""
+    ent = _cache.get(key)
+    return None if ent is None else _config_of(ent)
+
+
+def _config_of(ent: dict):
+    cfg = ent["config"]
+    return tuple(cfg) if isinstance(cfg, list) else cfg
+
+
+def tune_support_count(
+    tx_t: jax.Array,  # (W, N) int32 — the kernel-layout transactions
+    masks_t: jax.Array,  # (W, C) int32
+    interpret: bool = False,
+    smoke: bool | None = None,
+) -> dict:
+    """Search (block_n, block_c) for this support-count shape; returns
+    the full tuned-table entry (``entry['config']`` is the winner).
+    Memoized: the second call with an equivalently-padded shape is a
+    cache hit and runs nothing."""
+    global _hits, _misses
+    from repro.kernels.support_count import support_count_pallas
+
+    w, n = tx_t.shape
+    _, c = masks_t.shape
+    key = support_count_key(w, n, c, tx_t.dtype, interpret)
+    if key in _cache:
+        _hits += 1
+        return _cache[key]
+    _misses += 1
+    timings: dict[str, float] = {}
+    timed: list[tuple[tuple[int, int], float]] = []
+    for bn, bc in support_count_candidates(w, n, c, smoke=smoke):
+        t = _timeit(
+            lambda bn=bn, bc=bc: jax.block_until_ready(
+                support_count_pallas(tx_t, masks_t, block_n=bn, block_c=bc, interpret=interpret)
+            )
+        )
+        timings[str((bn, bc))] = t
+        timed.append(((bn, bc), t))
+    ent = _entry("support_count", key, _pick(timed), timings)
+    _cache[key] = ent
+    return ent
+
+
+def tune_kmeans_assign(
+    x: jax.Array,  # (N, D) f32, D lane-padded
+    centers: jax.Array,  # (K, D) f32, K lane-padded + BIG sentinel rows
+    interpret: bool = False,
+    smoke: bool | None = None,
+) -> dict:
+    """Search block_n for this kmeans-assign shape; returns the full
+    tuned-table entry.  Memoized like :func:`tune_support_count`."""
+    global _hits, _misses
+    from repro.kernels.kmeans_assign import kmeans_assign_pallas
+
+    n, d = x.shape
+    k, _ = centers.shape
+    key = kmeans_assign_key(n, d, k, x.dtype, interpret)
+    if key in _cache:
+        _hits += 1
+        return _cache[key]
+    _misses += 1
+    timings: dict[str, float] = {}
+    timed: list[tuple[int, float]] = []
+    for bn in kmeans_assign_candidates(n, d, k, smoke=smoke):
+        t = _timeit(
+            lambda bn=bn: jax.block_until_ready(
+                kmeans_assign_pallas(x, centers, block_n=bn, interpret=interpret)
+            )
+        )
+        timings[str(bn)] = t
+        timed.append((bn, t))
+    ent = _entry("kmeans_assign", key, _pick(timed), timings)
+    _cache[key] = ent
+    return ent
+
+
+# ---------------------------------------------------------------------------
+# Persisted tuned tables (JSON) — CI artifacts + serving reuse
+# ---------------------------------------------------------------------------
+
+
+def _key_of(ent: dict) -> tuple:
+    return (ent["kernel"], tuple(ent["shape"]), ent["dtype"], ent["platform"])
+
+
+def save_table(path: str) -> int:
+    """Write every memoized entry as a JSON tuned table; returns the
+    entry count.  The file is the CI artifact and the reuse seam: load
+    it at process start and every covered shape skips its search."""
+    entries = [_cache[k] for k in sorted(_cache)]
+    with open(path, "w") as fh:
+        json.dump({"version": 1, "entries": entries}, fh, indent=2, sort_keys=True)
+    return len(entries)
+
+
+def load_table(path: str, replace: bool = False) -> int:
+    """Merge (or, with ``replace=True``, reset to) a persisted tuned
+    table; returns the number of entries loaded.  Entries round-trip
+    exactly — ``save_table`` then ``load_table`` reproduces the memo."""
+    with open(path) as fh:
+        data = json.load(fh)
+    if replace:
+        clear_cache()
+    n = 0
+    for ent in data.get("entries", []):
+        _cache[_key_of(ent)] = ent
+        n += 1
+    return n

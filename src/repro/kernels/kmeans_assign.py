@@ -53,10 +53,15 @@ def kmeans_assign_pallas(
     returning (padded rows cost compute, never correctness).  Block-
     multiple inputs take the original zero-copy path bit-for-bit.  The
     D/K lane-padding contract (zero columns, +BIG sentinel center rows)
-    remains the wrapper's job — see ``ops.kmeans_assign``."""
+    remains the wrapper's job — see ``ops.kmeans_assign``.
+
+    Zero-size fast path: N=0 points (an empty delta batch) returns empty
+    outputs without building a degenerate Pallas grid."""
     n, d = x.shape
     k, d2_ = centers.shape
     assert d == d2_, (x.shape, centers.shape)
+    if n == 0:
+        return jnp.zeros((0,), jnp.int32), jnp.zeros((0,), jnp.float32)
     np_ = pad_to(max(n, block_n), block_n)
     x_p = x if np_ == n else jnp.zeros((np_, d), x.dtype).at[:n].set(x)
     grid = (np_ // block_n,)

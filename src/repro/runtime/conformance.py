@@ -90,10 +90,28 @@ def _conf_params(app: str, seed: int = 0) -> dict:
     return {"k": _K_ITEMSETS, "minsup": _MINSUP}
 
 
-def run_app(app: str, n_sites: int, schedule: str, backend, *, faults=None, seed: int = 0):
+def run_app(
+    app: str,
+    n_sites: int,
+    schedule: str,
+    backend,
+    *,
+    faults=None,
+    seed: int = 0,
+    count_backend: str = "jnp",
+    use_kernel: bool = False,
+    block: str | None = None,
+):
     """Execute one registered app through the generic GridRuntime.run on
     the given execution backend (name or instance); returns the
-    RuntimeRun."""
+    RuntimeRun.
+
+    ``count_backend``/``use_kernel`` select the compute path exactly as
+    ``GridRuntime`` does (the default jnp oracle keeps the CI matrix
+    cheap); ``block="auto"`` additionally flips the kernel wrappers'
+    block mode for the duration of the run, so the conformance digests
+    can be checked with autotuned tile shapes active — the autotuner's
+    never-changes-results contract, proven on the real apps."""
     xs, dbs = make_inputs(n_sites, seed)
     engine = Engine(
         model=GridModel(),
@@ -102,9 +120,19 @@ def run_app(app: str, n_sites: int, schedule: str, backend, *, faults=None, seed
         schedule=schedule,
         backend=backend,
     )
-    rt = GridRuntime(engine=engine, sync="pooled", use_kernel=False, count_backend="jnp")
+    rt = GridRuntime(
+        engine=engine, sync="pooled", use_kernel=use_kernel, count_backend=count_backend
+    )
     data = xs if get_workload(app).dataset_kind == "points" else dbs
-    return rt.run(app, data, _conf_params(app, seed))
+    if block is None:
+        return rt.run(app, data, _conf_params(app, seed))
+    from repro.kernels import ops
+
+    prev = ops.set_default_block(block)
+    try:
+        return rt.run(app, data, _conf_params(app, seed))
+    finally:
+        ops.set_default_block(prev)
 
 
 def result_digest(app: str, run) -> dict:
@@ -132,9 +160,26 @@ def schedule_fingerprint(rep: RunReport) -> dict:
     }
 
 
-def conformance_cell(app: str, n_sites: int, schedule: str, backend) -> dict:
+def conformance_cell(
+    app: str,
+    n_sites: int,
+    schedule: str,
+    backend,
+    *,
+    count_backend: str = "jnp",
+    use_kernel: bool = False,
+    block: str | None = None,
+) -> dict:
     """One (app, schedule) cell on one backend: digest + fingerprint."""
-    run = run_app(app, n_sites, schedule, backend)
+    run = run_app(
+        app,
+        n_sites,
+        schedule,
+        backend,
+        count_backend=count_backend,
+        use_kernel=use_kernel,
+        block=block,
+    )
     return {
         "app": app,
         "schedule": schedule,
@@ -181,6 +226,10 @@ def child_main(argv=None) -> dict:  # pragma: no cover - runs in the
     # wave); --fuse 0 = the PR-5 per-job shipment rounds.  Both modes must
     # produce bit-identical digests — the CI matrix runs each.
     ap.add_argument("--fuse", type=int, default=1, choices=(0, 1))
+    # compute-path knobs: --count-backend kernel + --block auto runs the
+    # matrix with the Pallas kernels and autotuned tile shapes active
+    ap.add_argument("--count-backend", default="jnp", choices=("jnp", "kernel"))
+    ap.add_argument("--block", default=None, choices=(None, "default", "auto"))
     args = ap.parse_args(argv)
 
     be = MultiHostBackend(
@@ -196,9 +245,14 @@ def child_main(argv=None) -> dict:  # pragma: no cover - runs in the
         "topology": be.describe(),
         "cells": [],
     }
+    knobs = {
+        "count_backend": args.count_backend,
+        "use_kernel": args.count_backend == "kernel",
+        "block": args.block,
+    }
     for app in args.apps.split(","):
         for schedule in args.schedules.split(","):
-            mh = conformance_cell(app, args.sites, schedule, be)
+            mh = conformance_cell(app, args.sites, schedule, be, **knobs)
             mh["executed"] = list(be.executed_log)
             mh["shipped"] = sorted(be.shipped_log)
             mh["owned_sites"] = list(
@@ -209,7 +263,7 @@ def child_main(argv=None) -> dict:  # pragma: no cover - runs in the
             # fusion shipments must equal waves (O(waves) collectives);
             # per-job mode ships once per executed job
             mh["ledger"] = dict(be.ledger(), waves=int(be.waves))
-            inline = conformance_cell(app, args.sites, schedule, "inline")
+            inline = conformance_cell(app, args.sites, schedule, "inline", **knobs)
             report["cells"].append({"multihost": mh, "inline": inline})
 
     # fault-injection under true distribution: a seeded injected failure

@@ -1,0 +1,235 @@
+"""Autotuner validation: tuned configs never change results (the
+block-size contract, property-tested over odd shapes), the memo is hit
+on the second call, persisted tables round-trip, and the ``block="auto"``
+seam keeps the real registry apps digest-identical."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # hermetic env: deterministic shim, no shrinking
+    from repro.testing import given, settings, strategies as st
+
+from repro.core.apriori import pack_bool_matrix, pack_itemsets
+from repro.kernels import autotune, ops, pad_to
+from repro.kernels.kmeans_assign import BIG, kmeans_assign_pallas
+from repro.kernels.support_count import support_count_pallas
+
+
+@pytest.fixture(autouse=True)
+def _fresh_cache():
+    """Each test starts from an empty memo and the tiny smoke lattice
+    (the full lattice sweep belongs to the benchmarks, not unit tests)."""
+    autotune.clear_cache()
+    prev = autotune.set_smoke(True)
+    yield
+    autotune.set_smoke(prev)
+    autotune.clear_cache()
+
+
+def _support_inputs(n, items, c, seed):
+    rng = np.random.default_rng(seed)
+    dense = rng.random((n, items)) < 0.3
+    tx = jnp.asarray(pack_bool_matrix(dense))
+    sets = [
+        tuple(sorted(rng.choice(items, size=rng.integers(1, min(4, items) + 1), replace=False).tolist()))
+        for _ in range(c)
+    ]
+    masks = jnp.asarray(pack_itemsets(sets, items))
+    return tx, masks
+
+
+class TestSearch:
+    def test_candidates_deterministic_default_first(self):
+        cands = autotune.support_count_candidates(4, 700, 300)
+        assert cands[0] == autotune.DEFAULT_SUPPORT_BLOCKS
+        assert cands == autotune.support_count_candidates(4, 700, 300)
+        assert len(cands) == len(set(cands))
+        kc = autotune.kmeans_assign_candidates(700, 128, 128)
+        assert kc[0] == autotune.DEFAULT_KMEANS_BLOCK
+        assert kc == autotune.kmeans_assign_candidates(700, 128, 128)
+
+    def test_candidates_respect_vmem_budget(self):
+        for bn, bc in autotune.support_count_candidates(32, 5000, 5000, smoke=False)[1:]:
+            assert autotune.support_count_vmem(32, bn, bc) <= autotune.VMEM_BUDGET_BYTES
+        for bn in autotune.kmeans_assign_candidates(5000, 1024, 1024, smoke=False)[1:]:
+            assert autotune.kmeans_assign_vmem(1024, 1024, bn) <= autotune.VMEM_BUDGET_BYTES
+
+    def test_pick_keeps_default_within_margin(self):
+        default = autotune.DEFAULT_SUPPORT_BLOCKS
+        # a 1% "win" is noise: default survives
+        assert autotune._pick([(default, 1.00), ((128, 128), 0.99)]) == default
+        # a beyond-margin win replaces it
+        assert autotune._pick([(default, 1.00), ((128, 128), 0.50)]) == (128, 128)
+        # default never loses to a slower candidate
+        assert autotune._pick([(default, 1.00), ((128, 128), 2.00)]) == default
+
+    def test_memo_hit_on_second_call(self):
+        tx, masks = _support_inputs(300, 32, 40, seed=0)
+        tx_t = jnp.asarray(np.asarray(tx).astype(np.int64).astype(np.int32)).T
+        mk_t = jnp.asarray(np.asarray(masks).astype(np.int64).astype(np.int32)).T
+        e1 = autotune.tune_support_count(tx_t, mk_t, interpret=True)
+        stats = autotune.cache_stats()
+        assert stats["misses"] == 1 and stats["entries"] == 1
+        e2 = autotune.tune_support_count(tx_t, mk_t, interpret=True)
+        assert e2 is e1  # the literal cached entry, nothing re-timed
+        assert autotune.cache_stats()["hits"] == 1
+
+    def test_key_buckets_at_lane_granularity(self):
+        """Shapes padding to the same 128-multiple share one search (all
+        lattice blocks are multiples of 128, so they tile identically)."""
+        k1 = autotune.support_count_key(4, 129, 40, jnp.int32, True)
+        k2 = autotune.support_count_key(4, 250, 3, jnp.int32, True)
+        assert k1 == k2
+        assert k1 != autotune.support_count_key(4, 257, 40, jnp.int32, True)
+        assert k1 != autotune.support_count_key(4, 129, 40, jnp.int32, False)
+
+    def test_lookup_is_pure(self):
+        key = autotune.support_count_key(4, 100, 10, jnp.int32, True)
+        assert autotune.lookup(key) is None
+        assert autotune.cache_stats()["entries"] == 0
+
+
+class TestTunedEqualsDefault:
+    """Block size must never change results — tuned == default output,
+    bit for bit, over odd (non-block-multiple) shapes."""
+
+    @given(
+        n=st.integers(1, 800),
+        items=st.integers(1, 64),
+        c=st.integers(1, 150),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    @settings(max_examples=10, deadline=None)
+    def test_support_count(self, n, items, c, seed):
+        tx, masks = _support_inputs(n, items, c, seed)
+        tx_t = jnp.asarray(np.asarray(tx).astype(np.int64).astype(np.int32)).T
+        mk_t = jnp.asarray(np.asarray(masks).astype(np.int64).astype(np.int32)).T
+        ent = autotune.tune_support_count(tx_t, mk_t, interpret=True)
+        bn, bc = ent["config"]
+        tuned = support_count_pallas(tx_t, mk_t, block_n=bn, block_c=bc, interpret=True)
+        dn, dc = autotune.DEFAULT_SUPPORT_BLOCKS
+        default = support_count_pallas(tx_t, mk_t, block_n=dn, block_c=dc, interpret=True)
+        np.testing.assert_array_equal(np.asarray(tuned), np.asarray(default))
+
+    @given(
+        n=st.integers(1, 700),
+        d=st.integers(1, 96),
+        k=st.integers(1, 40),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    @settings(max_examples=10, deadline=None)
+    def test_kmeans_assign(self, n, d, k, seed):
+        rng = np.random.default_rng(seed)
+        dp, kp = pad_to(max(d, 128), 128), pad_to(max(k, 128), 128)
+        xp = jnp.zeros((n, dp), jnp.float32).at[:, :d].set(
+            jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+        )
+        cp = jnp.full((kp, dp), 0.0, jnp.float32)
+        cp = cp.at[:, :d].set(jnp.full((kp, d), BIG, jnp.float32))
+        cp = cp.at[:k, :d].set(jnp.asarray(rng.normal(size=(k, d)).astype(np.float32)))
+        ent = autotune.tune_kmeans_assign(xp, cp, interpret=True)
+        a_t, d_t = kmeans_assign_pallas(xp, cp, block_n=ent["config"], interpret=True)
+        a_d, d_d = kmeans_assign_pallas(
+            xp, cp, block_n=autotune.DEFAULT_KMEANS_BLOCK, interpret=True
+        )
+        np.testing.assert_array_equal(np.asarray(a_t), np.asarray(a_d))
+        np.testing.assert_array_equal(np.asarray(d_t), np.asarray(d_d))
+
+    def test_ops_auto_equals_default(self):
+        """The ops-wrapper seam end-to-end: block='auto' == block=None."""
+        tx, masks = _support_inputs(413, 48, 77, seed=5)
+        np.testing.assert_array_equal(
+            np.asarray(ops.support_count(tx, masks, block="auto")),
+            np.asarray(ops.support_count(tx, masks)),
+        )
+        cnt, freq = ops.support_count_prune(tx, masks, 37, block="auto")
+        want = np.asarray(ops.support_count(tx, masks))
+        np.testing.assert_array_equal(np.asarray(cnt), want)
+        np.testing.assert_array_equal(np.asarray(freq), want >= 37)
+
+
+class TestTableRoundTrip:
+    def test_save_load_reproduces_memo(self, tmp_path):
+        tx, masks = _support_inputs(300, 32, 40, seed=1)
+        tx_t = jnp.asarray(np.asarray(tx).astype(np.int64).astype(np.int32)).T
+        mk_t = jnp.asarray(np.asarray(masks).astype(np.int64).astype(np.int32)).T
+        ent = autotune.tune_support_count(tx_t, mk_t, interpret=True)
+        path = str(tmp_path / "tuned.json")
+        assert autotune.save_table(path) == 1
+        autotune.clear_cache()
+        assert autotune.load_table(path) == 1
+        key = autotune.support_count_key(
+            tx_t.shape[0], tx_t.shape[1], mk_t.shape[1], tx_t.dtype, True
+        )
+        assert autotune.lookup(key) == tuple(ent["config"])
+        # a tune after load is a pure cache hit — no re-search
+        again = autotune.tune_support_count(tx_t, mk_t, interpret=True)
+        assert again["config"] == ent["config"]
+        assert autotune.cache_stats()["misses"] == 0
+
+    def test_load_replace_resets(self, tmp_path):
+        tx, masks = _support_inputs(300, 32, 40, seed=2)
+        tx_t = jnp.asarray(np.asarray(tx).astype(np.int64).astype(np.int32)).T
+        mk_t = jnp.asarray(np.asarray(masks).astype(np.int64).astype(np.int32)).T
+        autotune.tune_support_count(tx_t, mk_t, interpret=True)
+        path = str(tmp_path / "tuned.json")
+        autotune.save_table(path)
+        autotune.tune_support_count(tx_t[:, :128], mk_t, interpret=True)
+        assert autotune.cache_stats()["entries"] == 2
+        autotune.load_table(path, replace=True)
+        assert autotune.cache_stats()["entries"] == 1
+
+
+class TestModeSeam:
+    def test_set_default_block_validates_and_restores(self):
+        prev = ops.set_default_block("auto")
+        try:
+            assert ops.default_block() == "auto"
+            with pytest.raises(ValueError):
+                ops.set_default_block("turbo")
+        finally:
+            ops.set_default_block(prev)
+
+    def test_traced_caller_uses_memo_or_default(self):
+        """Under jit the autotuner cannot time — a traced call must use
+        the memoized winner when present and the default otherwise,
+        never crash."""
+        rng = np.random.default_rng(6)
+        x = jnp.asarray(rng.normal(size=(200, 8)).astype(np.float32))
+        c = jnp.asarray(rng.normal(size=(4, 8)).astype(np.float32))
+
+        @jax.jit
+        def assign(x, c):
+            a, _ = ops.kmeans_assign(x, c, block="auto")
+            return a
+
+        a_jit = assign(x, c)  # cold memo: default config under trace
+        a_eager = ops.kmeans_assign(x, c)[0]
+        np.testing.assert_array_equal(np.asarray(a_jit), np.asarray(a_eager))
+
+    def test_conformance_digest_with_auto_blocks(self):
+        """Registry apps stay digest-identical across inline x batched
+        with the kernel count backend and block='auto' active — the
+        acceptance criterion that autotuning changes speed, not results.
+        (The multihost x kernel cell runs in the CI conformance matrix.)"""
+        from repro.runtime.conformance import result_digest, run_app
+
+        base = result_digest("gfm", run_app("gfm", 3, "staged", "inline"))
+        for backend in ("inline", "batched"):
+            got = result_digest(
+                "gfm",
+                run_app(
+                    "gfm",
+                    3,
+                    "staged",
+                    backend,
+                    count_backend="kernel",
+                    use_kernel=True,
+                    block="auto",
+                ),
+            )
+            assert got == base, backend

@@ -40,7 +40,17 @@ GROUPS = {
     "3p": (3, 4, 0),
     "2p_batched": (2, 3, 1),
     "3p_batched": (3, 4, 1),
+    # kernel count backend with autotuned blocks active: digests AND
+    # fingerprints must still equal the parent's jnp inline reference —
+    # the autotuner's never-changes-results contract under true
+    # distribution (completing the inline x batched x multihost matrix
+    # with block="auto")
+    "kauto": (2, 3, 1),
 }
+# per-group extra child argv / env (the kauto group flips the compute
+# path; the smoke lattice keeps its in-child autotune searches tiny)
+GROUP_ARGS = {"kauto": ["--count-backend", "kernel", "--block", "auto"]}
+GROUP_ENV = {"kauto": {"REPRO_AUTOTUNE_SMOKE": "1"}}
 CELLS = [(app, sched) for app in APPS for sched in SCHEDULES]
 
 # init failures that mean "this environment cannot run jax.distributed",
@@ -61,11 +71,18 @@ def _free_port() -> int:
         return s.getsockname()[1]
 
 
-def _launch_group(nprocs: int, n_sites: int, fuse: int = 1) -> dict:
+def _launch_group(
+    nprocs: int,
+    n_sites: int,
+    fuse: int = 1,
+    extra_args: list[str] | None = None,
+    extra_env: dict[str, str] | None = None,
+) -> dict:
     port = _free_port()
     env = dict(os.environ)
     env["JAX_PLATFORMS"] = "cpu"
     env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env.update(extra_env or {})
     procs = [
         subprocess.Popen(
             [
@@ -77,6 +94,7 @@ def _launch_group(nprocs: int, n_sites: int, fuse: int = 1) -> dict:
                 "--port", str(port),
                 "--sites", str(n_sites),
                 "--fuse", str(fuse),
+                *(extra_args or []),
             ],
             stdout=subprocess.PIPE,
             stderr=subprocess.PIPE,
@@ -117,7 +135,9 @@ _group_cache: dict = {}
 def _group(name: str) -> dict:
     if name not in _group_cache:
         nprocs, n_sites, fuse = GROUPS[name]
-        _group_cache[name] = _launch_group(nprocs, n_sites, fuse)
+        _group_cache[name] = _launch_group(
+            nprocs, n_sites, fuse, GROUP_ARGS.get(name), GROUP_ENV.get(name)
+        )
         _write_artifact()
     g = _group_cache[name]
     if "error" in g:

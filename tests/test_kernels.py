@@ -14,7 +14,7 @@ from repro.core.apriori import pack_bool_matrix, pack_itemsets
 from repro.kernels import ops
 from repro.kernels.kmeans_assign import BIG, kmeans_assign_pallas
 from repro.kernels.ref import kmeans_assign_ref, support_count_ref
-from repro.kernels.support_count import support_count_pallas
+from repro.kernels.support_count import support_count_pallas, support_count_prune_pallas
 
 
 class TestKMeansAssignKernel:
@@ -163,6 +163,129 @@ class TestSupportCountKernel:
         got = ops.support_count(tx, masks)
         direct = np.array([dense[:, list(s)].all(axis=1).sum() for s in sets])
         np.testing.assert_array_equal(np.asarray(got), direct)
+
+
+class TestZeroSizeEdges:
+    """C=0 candidates (a dried-up Apriori level) and N=0 transactions/
+    points (an empty delta batch) must return empty results instead of
+    building a degenerate Pallas grid — both shapes are reachable from
+    ``DeltaApriori.append`` and the level loop."""
+
+    def test_support_count_zero_candidates(self):
+        rng = np.random.default_rng(0)
+        tx = jnp.asarray(pack_bool_matrix(rng.random((50, 32)) < 0.4))
+        out = ops.support_count(tx, jnp.zeros((0, 1), jnp.uint32))
+        assert out.shape == (0,) and out.dtype == jnp.int32
+
+    def test_support_count_zero_transactions(self):
+        masks = jnp.asarray(pack_itemsets([(0, 1), (2,)], 32))
+        out = ops.support_count(jnp.zeros((0, 1), jnp.uint32), masks)
+        assert out.shape == (2,)
+        np.testing.assert_array_equal(np.asarray(out), [0, 0])
+
+    def test_support_count_prune_zero_sizes(self):
+        masks = jnp.asarray(pack_itemsets([(0, 1), (2,)], 32))
+        cnt, freq = ops.support_count_prune(jnp.zeros((0, 1), jnp.uint32), masks, 1)
+        assert cnt.shape == (2,) and freq.shape == (2,)
+        assert not np.asarray(freq).any()
+        cnt0, freq0 = ops.support_count_prune(
+            jnp.zeros((0, 1), jnp.uint32), jnp.zeros((0, 1), jnp.uint32), 1
+        )
+        assert cnt0.shape == (0,) and freq0.shape == (0,)
+
+    def test_kmeans_assign_zero_points(self):
+        rng = np.random.default_rng(1)
+        c = jnp.asarray(rng.normal(size=(4, 8)).astype(np.float32))
+        a, d2 = ops.kmeans_assign(jnp.zeros((0, 8), jnp.float32), c)
+        assert a.shape == (0,) and d2.shape == (0,)
+        assert a.dtype == jnp.int32 and d2.dtype == jnp.float32
+
+    def test_pallas_entries_zero_sizes(self):
+        """The jitted kernel entry points themselves take the fast path."""
+        a, d2 = kmeans_assign_pallas(
+            jnp.zeros((0, 128), jnp.float32),
+            jnp.full((128, 128), BIG, jnp.float32),
+            interpret=True,
+        )
+        assert a.shape == (0,)
+        out = support_count_pallas(
+            jnp.zeros((2, 10), jnp.int32), jnp.zeros((2, 0), jnp.int32), interpret=True
+        )
+        assert out.shape == (0,)
+        out = support_count_pallas(
+            jnp.zeros((2, 0), jnp.int32), jnp.ones((2, 3), jnp.int32), interpret=True
+        )
+        np.testing.assert_array_equal(np.asarray(out), [0, 0, 0])
+
+
+class TestSupportCountPrune:
+    """The fused count+threshold kernel must equal count-then-threshold
+    exactly — the conformance-adjacent gate for the Apriori level fusion."""
+
+    @given(
+        n=st.integers(1, 900),
+        items=st.integers(1, 96),
+        c=st.integers(1, 200),
+        min_count=st.integers(0, 400),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_equals_count_then_threshold(self, n, items, c, min_count, seed):
+        rng = np.random.default_rng(seed)
+        dense = rng.random((n, items)) < 0.3
+        tx = jnp.asarray(pack_bool_matrix(dense))
+        sets = [
+            tuple(sorted(rng.choice(items, size=rng.integers(1, min(4, items) + 1), replace=False).tolist()))
+            for _ in range(c)
+        ]
+        masks = jnp.asarray(pack_itemsets(sets, items))
+        cnt, freq = ops.support_count_prune(tx, masks, min_count)
+        want = np.asarray(ops.support_count(tx, masks))
+        np.testing.assert_array_equal(np.asarray(cnt), want)
+        np.testing.assert_array_equal(np.asarray(freq), want >= min_count)
+
+    def test_threshold_is_traced_not_static(self):
+        """Distinct thresholds must share one compilation (min_count is a
+        traced operand, not a static arg that would recompile per level)."""
+        rng = np.random.default_rng(2)
+        tx = jnp.asarray(pack_bool_matrix(rng.random((200, 32)) < 0.4))
+        masks = jnp.asarray(pack_itemsets([(0,), (1, 2), (3, 4, 5)], 32))
+        base = np.asarray(ops.support_count(tx, masks))
+        for mc in (0, 1, 50, 200, 10**6):
+            _, freq = ops.support_count_prune(tx, masks, mc)
+            np.testing.assert_array_equal(np.asarray(freq), base >= mc)
+
+    def test_empty_mask_pad_correction_in_kernel(self):
+        """The in-kernel pad correction must run BEFORE thresholding: an
+        all-zero mask over a non-block-multiple N must report the true
+        transaction count and threshold against it."""
+        rng = np.random.default_rng(3)
+        dense = rng.random((130, 32)) < 0.5
+        tx_t = jnp.asarray(pack_bool_matrix(dense).astype(np.int64).astype(np.int32)).T
+        mk_t = jnp.zeros((tx_t.shape[0], 2), jnp.int32)
+        cnt, freq = support_count_prune_pallas(
+            tx_t, mk_t, 131, block_n=128, block_c=128, interpret=True
+        )
+        np.testing.assert_array_equal(np.asarray(cnt), [130, 130])
+        # 130 < 131: the padded (256-row) count would wrongly pass
+        np.testing.assert_array_equal(np.asarray(freq), [False, False])
+        _, freq2 = support_count_prune_pallas(
+            tx_t, mk_t, 130, block_n=128, block_c=128, interpret=True
+        )
+        np.testing.assert_array_equal(np.asarray(freq2), [True, True])
+
+    def test_prune_sites_per_site_thresholds(self):
+        """The fused site-axis form applies each site's OWN threshold."""
+        rng = np.random.default_rng(4)
+        dense = rng.random((2, 90, 32)) < 0.4
+        txs = jnp.asarray(np.stack([pack_bool_matrix(d) for d in dense]))
+        sets = [(0, 1), (2,), (3, 4)]
+        masks = jnp.asarray(np.stack([pack_itemsets(sets, 32)] * 2))
+        cnt, freq = ops.support_count_prune_sites(txs, masks, jnp.asarray([5, 80]))
+        for i, mc in enumerate((5, 80)):
+            want = np.asarray(ops.support_count(txs[i], masks[i]))
+            np.testing.assert_array_equal(np.asarray(cnt[i]), want)
+            np.testing.assert_array_equal(np.asarray(freq[i]), want >= mc)
 
 
 class TestSLSTMKernel:
