@@ -166,6 +166,12 @@ def fused_count_sites(
     Falls back to the per-site loop when the sites disagree on the item
     universe (no common mask width) — correctness first, fusion when
     legal.
+
+    The "site" axis is purely positional: under cross-request batching
+    (``GridRuntime.run_many``) the entries may come from DIFFERENT
+    requests mining the same dataset, so nothing here may assume the
+    lists share a threshold or a candidate pool — each position is
+    counted against its own list only.
     """
     lists = [list(lst) for lst in itemset_lists]
     if len(dbs) != len(lists):
@@ -212,8 +218,12 @@ def fused_prune_sites(
     heterogeneous thresholds ride the same launch).  Returns one
     ``(counts (C_i,) int64, frequent (C_i,) bool)`` pair per site, with
     ``counts`` exactly equal to ``fused_count_sites`` and ``frequent ==
-    counts >= min_counts[i]``.  Same padding rules and heterogeneous-
-    universe fallback as the count-only form."""
+    counts >= min_counts[i]``.  Same padding rules, heterogeneous-
+    universe fallback, and positional-axis contract as the count-only
+    form — per-position ``min_counts`` is what lets one launch serve
+    members of different requests (different ``minsup``) under
+    cross-request batching, since the threshold is a traced operand and
+    never a compile-time constant."""
     lists = [list(lst) for lst in itemset_lists]
     if len(dbs) != len(lists):
         raise ValueError(f"{len(dbs)} sites but {len(lists)} candidate lists")
@@ -362,6 +372,12 @@ def batched_local_apriori(
     ``count_calls`` ledger (which counts the protocol's logical
     per-site count rounds, not device dispatches) — but the fan-out
     costs one kernel launch per level instead of one per site-level.
+
+    ``min_counts`` is per position for the same reason it is in
+    ``fused_prune_sites``: a cross-request fused wave mines the same
+    shards under different thresholds, and sites exhaust (leave
+    ``active``) independently — a position that stops generating
+    candidates at level l must not drag its wave-mates down with it.
     """
     if len(dbs) != len(min_counts):
         raise ValueError(f"{len(dbs)} sites but {len(min_counts)} thresholds")

@@ -184,29 +184,42 @@ def cd_site_jobs(
 
     def count_batched(level):
         def fused(bargs, argss):
+            # bargs carry (site, state_accessor): each member's
+            # DeltaApriori belongs to ITS OWN request's build closure —
+            # in a cross-request merged wave (service fusion) serving one
+            # request's counts from another's cumulative cache would
+            # corrupt the ledgered pass counts.  Candidates and
+            # exhaustion are per member too (each member's prev dep is
+            # its own request's reduce, and requests with different
+            # minsup exhaust at different levels); within one engine run
+            # all members share one reduce dep, which degenerates to the
+            # old all-or-nothing early-out exactly.
             prevs = [args[0] if args else None for args in argss]
-            if level > 1 and any(p is None or not p["global"] for p in prevs):
-                # members share the same reduce dep, so exhaustion is
-                # all-or-nothing — mirror the per-site early-out exactly
-                return [None] * len(bargs)
-            cands = _level_candidates(
-                level, n_items, prevs[0]["global"] if prevs[0] else []
-            )
+            live = [
+                j for j in range(len(bargs))
+                if level == 1 or (prevs[j] is not None and prevs[j]["global"])
+            ]
+            outs: list[dict | None] = [None] * len(bargs)
+            if not live:
+                return outs
             t0 = time.perf_counter()
-            sts = [_state(i) for i in bargs]
-            missing_by = [st.uncached(cands) for st in sts]
+            cands_by = [
+                _level_candidates(level, n_items, prevs[j]["global"] if prevs[j] else [])
+                for j in live
+            ]
+            sts = [bargs[j][1](bargs[j][0]) for j in live]
+            missing_by = [st.uncached(cands) for st, cands in zip(sts, cands_by)]
             if any(missing_by):
                 sups = fused_count_sites(
                     [st.stream() for st in sts], missing_by, backend=backend
                 )
                 for st, missing, sup in zip(sts, missing_by, sups):
                     st.fold_exact(missing, sup)
-            share = (time.perf_counter() - t0) / max(len(bargs), 1)
-            outs = []
-            for st, missing in zip(sts, missing_by):
+            share = (time.perf_counter() - t0) / max(len(live), 1)
+            for j, st, cands, missing in zip(live, sts, cands_by, missing_by):
                 passes = 1 if level == 1 else (1 if missing else 0)
-                outs.append({"cands": cands, "cnt": st.counts_for(cands),
-                             "t": share, "passes": passes})
+                outs[j] = {"cands": cands, "cnt": st.counts_for(cands),
+                           "t": share, "passes": passes}
             return outs
 
         return fused
@@ -239,7 +252,7 @@ def cd_site_jobs(
                     site=i,
                     batch_key=f"count_{level}",
                     batched_fn=count_batched_fn,
-                    batch_arg=i,
+                    batch_arg=(i, _state),
                 )
             )
         jobs.append(

@@ -220,38 +220,49 @@ def fdm_site_jobs(
 
     def count_batched(level):
         def fused(bargs, argss):
+            # ``bargs`` carry ``(site, l_min_site)``: in a cross-request
+            # merged wave (service fusion — same shapes, different minsup)
+            # the FIRST member's closure executes the whole group, so each
+            # member's request-specific local threshold must travel in its
+            # batch arg, not the closure.  Exhaustion is per MEMBER: each
+            # member's prev dep is its own request's decide, so requests
+            # may exhaust at different levels (within one request all
+            # members share one decide dep, which degenerates to the old
+            # all-or-nothing early-out exactly).
             prevs = [args[0] if args else None for args in argss]
-            if level > 1 and any(p is None or not p["global"] for p in prevs):
-                # all members share the same decide dep, so exhaustion is
-                # all-or-nothing — mirror the per-site early-out exactly
-                return [None] * len(bargs)
+            live = [
+                j for j in range(len(bargs))
+                if level == 1 or (prevs[j] is not None and prevs[j]["global"])
+            ]
+            outs: list[dict | None] = [None] * len(bargs)
+            if not live:
+                return outs
             cands_by = [
                 site_candidates(
                     level,
-                    sites[i],
+                    sites[bargs[j][0]],
                     prevs[j]["global"] if prevs[j] else [],
-                    prevs[j]["local"][i] if prevs[j] else set(),
+                    prevs[j]["local"][bargs[j][0]] if prevs[j] else set(),
                 )
-                for j, i in enumerate(bargs)
+                for j in live
             ]
             t0 = time.perf_counter()
             if level == 1:
-                sups = [item_supports(sites[i]) for i in bargs]
+                sups = [item_supports(sites[bargs[j][0]]) for j in live]
             else:
-                sups = fused_count_sites([sites[i] for i in bargs], cands_by, backend=backend)
-            share = (time.perf_counter() - t0) / max(len(bargs), 1)
-            outs = []
-            for j, i in enumerate(bargs):
-                cands = cands_by[j]
-                cnt = {its: int(c) for its, c in zip(cands, np.asarray(sups[j]))}
-                outs.append(
-                    {
-                        "cnt": cnt,
-                        "ann": {its for its in cands if cnt[its] >= l_min[i]},
-                        "t": share,
-                        "counted": level == 1 or bool(cands),
-                    }
+                sups = fused_count_sites(
+                    [sites[bargs[j][0]] for j in live], cands_by, backend=backend
                 )
+            share = (time.perf_counter() - t0) / max(len(live), 1)
+            for j, cands, sup in zip(live, cands_by, sups):
+                _i, lmin = bargs[j]
+                cnt = {its: int(c) for its, c in zip(cands, np.asarray(sup))}
+                outs[j] = {
+                    "cnt": cnt,
+                    "ann": {its for its in cands if cnt[its] >= lmin},
+                    "t": share,
+                    "counted": level == 1 or bool(cands),
+                }
             return outs
 
         return fused
@@ -305,31 +316,37 @@ def fdm_site_jobs(
 
     def remote_batched(level):
         def fused(bargs, argss):
-            # members share the announce dep; each brings its own count
-            if any(cout is None or ann is None for cout, ann in argss):
-                return [None] * len(bargs)
+            # each member brings its own request's count + announce deps;
+            # exhausted members (cross-request fusion: another request's
+            # search may have ended earlier) pass through as None while
+            # the live members share one fused dispatch
+            live = [
+                j for j in range(len(bargs))
+                if argss[j][0] is not None and argss[j][1] is not None
+            ]
+            outs: list[dict | None] = [None] * len(bargs)
+            if not live:
+                return outs
             remote_by = [
-                [its for its in ann["announced"] if its not in cout["cnt"]]
-                for cout, ann in argss
+                [its for its in argss[j][1]["announced"] if its not in argss[j][0]["cnt"]]
+                for j in live
             ]
             t0 = time.perf_counter()
-            sups = fused_count_sites([sites[i] for i in bargs], remote_by, backend=backend)
+            sups = fused_count_sites([sites[bargs[j]] for j in live], remote_by, backend=backend)
             dt = time.perf_counter() - t0 if any(remote_by) else 0.0
             share = dt / max(sum(1 for r in remote_by if r), 1)
-            outs = []
-            for (cout, _ann), remote, sup in zip(argss, remote_by, sups):
+            for j, remote, sup in zip(live, remote_by, sups):
+                cout = argss[j][0]
                 if remote:
                     for its, c in zip(remote, np.asarray(sup)):
                         cout["cnt"][its] = int(c)
-                outs.append(
-                    {
-                        "cnt": cout["cnt"],
-                        "n_remote": len(remote),
-                        "count_t": cout["t"],
-                        "count_counted": cout["counted"],
-                        "remote_t": share if remote else 0.0,
-                    }
-                )
+                outs[j] = {
+                    "cnt": cout["cnt"],
+                    "n_remote": len(remote),
+                    "count_t": cout["t"],
+                    "count_counted": cout["counted"],
+                    "remote_t": share if remote else 0.0,
+                }
             return outs
 
         return fused
@@ -381,7 +398,7 @@ def fdm_site_jobs(
                     site=i,  # GridModel.transfer_s normalizes to its link matrix
                     batch_key=f"count_{level}",
                     batched_fn=count_batched_fn,
-                    batch_arg=i,
+                    batch_arg=(i, l_min[i]),
                 )
             )
         jobs.append(

@@ -274,8 +274,12 @@ def gfm_site_jobs(
         return fn
 
     def apriori_batched(bargs, argss):
-        dbs = [sites[i] for i in bargs]
-        mins = [int(np.ceil(l_ratio * db.n_tx)) for db in dbs]
+        # bargs carry (site, local_min_count): in a cross-request merged
+        # wave (service fusion — same shapes, different minsup) the FIRST
+        # member's closure executes the whole group, so each member's
+        # request-specific local threshold travels in its batch arg
+        dbs = [sites[i] for i, _ in bargs]
+        mins = [m for _, m in bargs]
         return batched_local_apriori(dbs, k, mins, backend=backend)
 
     for i in range(s):
@@ -287,7 +291,7 @@ def gfm_site_jobs(
                 input_bytes=int(np.asarray(sites[i].packed).nbytes),
                 batch_key="apriori",
                 batched_fn=timed_batch(apriori_batched, measured),
-                batch_arg=i,
+                batch_arg=(i, int(np.ceil(l_ratio * sites[i].n_tx))),
             )
         )
 
@@ -324,14 +328,15 @@ def gfm_site_jobs(
         return fn
 
     def recount_batched(bargs, argss):
-        # every member shares the same "pool" dependency; each brings its
-        # own site's LocalMineResult
-        pool = argss[0][1]
-        lms = [lm for lm, _pool in argss]
-        missing_by = [[its for its in pool if its not in lm.counts] for lm in lms]
+        # each member brings its own site's LocalMineResult AND its own
+        # request's pool dep — within one engine run every member shares
+        # the same pool object, but a cross-request merged wave (service
+        # fusion) has one pool per request, so the pool must come from
+        # each member's argss entry, never from member 0's
+        missing_by = [[its for its in pool if its not in lm.counts] for lm, pool in argss]
         sups = fused_count_sites([sites[i] for i in bargs], missing_by, backend=backend)
         outs = []
-        for lm, missing, sup in zip(lms, missing_by, sups):
+        for (lm, _pool), missing, sup in zip(argss, missing_by, sups):
             if missing:
                 for its, c in zip(missing, sup):
                     lm.counts[its] = int(c)

@@ -121,6 +121,13 @@ def kmeans_warm(
     statistics), minus the seeding: ``kmeans_warm(x, prev.centers,
     iters=n)`` continues where the previous fit stopped, and on identical
     data reproduces ``kmeans``'s fixed point (idempotent once converged).
+
+    This history dependence is why the ``kmeans`` workload is the ONE
+    app with no ``exec_batch_key`` hook: a fused wave builds every
+    member's callable before any member's finalize writes centroids
+    back, so fusing two same-``k`` queries would silently turn the
+    second's warm start into a cold one.  Serial per-group execution
+    keeps the query-order semantics observable and deterministic.
     """
     n, d = x.shape
     x = x.astype(jnp.float32)

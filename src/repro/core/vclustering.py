@@ -253,6 +253,14 @@ def _perturb_batch(xs, slots, merged: MergeResult, b: int):
     return jax.vmap(lambda x, s: perturb_site(x, s, merged, b)[0])(xs, slots)
 
 
+@functools.partial(jax.jit, static_argnames=("b",))
+def _perturb_batch_many(xs, slots, merged: MergeResult, b: int):
+    """Like ``_perturb_batch`` but with one MergeResult PER MEMBER
+    (leaves stacked on a leading axis) — the cross-request fused waves
+    of the serving layer carry each request's own merge result."""
+    return jax.vmap(lambda x, s, m: perturb_site(x, s, m, b)[0])(xs, slots, merged)
+
+
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def vcluster_pooled(key: jax.Array, xs: jax.Array, cfg: VClusterConfig = VClusterConfig()) -> VClusterResult:
     """Reference driver: xs is (s, n, D) — s sites' datasets stacked.
@@ -361,8 +369,13 @@ def vcluster_site_jobs(
         return fn
 
     def cluster_batched(bargs, argss):
-        idx = jnp.asarray(bargs, dtype=jnp.int32)
-        assigns, st = _site_local_batch(keys[idx], xs[idx], cfg)
+        # bargs carry (site, site_key): a cross-request merged wave
+        # (service fusion) executes under the FIRST member's closure, and
+        # each member's PRNG key is request-specific (per-request seeds)
+        # while the site data is pinned identical by the fuse signature
+        idx = jnp.asarray([i for i, _ in bargs], dtype=jnp.int32)
+        bkeys = jnp.stack([kk for _, kk in bargs])
+        assigns, st = _site_local_batch(bkeys, xs[idx], cfg)
         return [
             (assigns[j], SuffStats(sizes=st.sizes[j], centers=st.centers[j], sse=st.sse[j]))
             for j in range(len(bargs))
@@ -378,7 +391,7 @@ def vcluster_site_jobs(
                 output_bytes=stats_nbytes,
                 batch_key="cluster",
                 batched_fn=timed_batch(cluster_batched, measured),
-                batch_arg=i,
+                batch_arg=(i, keys[i]),
             )
         )
 
@@ -409,11 +422,19 @@ def vcluster_site_jobs(
         return fn
 
     def perturb_batched(bargs, argss):
-        merged = argss[0][1]  # same "merge" dependency for every member
         idx = jnp.asarray(bargs, dtype=jnp.int32)
         assigns = jnp.stack([site_out[0] for site_out, _ in argss])
         slots = assigns + (idx * jnp.int32(k))[:, None]
-        labels = _perturb_batch(xs[idx], slots, merged, cfg.border_candidates)
+        mergeds = [m for _, m in argss]
+        if all(m is mergeds[0] for m in mergeds):
+            # one engine run: every member shares the same "merge" dep —
+            # keep the exact broadcast path (bitwise-stable, what the
+            # cross-backend conformance suite pins)
+            labels = _perturb_batch(xs[idx], slots, mergeds[0], cfg.border_candidates)
+        else:
+            # cross-request merged wave: one MergeResult per member
+            merged = jax.tree_util.tree_map(lambda *a: jnp.stack(a), *mergeds)
+            labels = _perturb_batch_many(xs[idx], slots, merged, cfg.border_candidates)
         return [labels[j] for j in range(len(bargs))]
 
     for i in range(s):

@@ -20,6 +20,15 @@ arXiv:1412.2673) is a bursty stream of arrivals from many users.
     and every execution runs through the engine's execution backends
     (``batched`` by default: shape-identical fan-out jobs fuse into one
     vmapped dispatch; ``multihost`` partitions sites across processes).
+  * **cross-request batching** — execution groups in the same wave whose
+    workloads report a compatible batch signature
+    (``WorkloadSpec.exec_batch_key``: same app, dataset, version, and
+    signature tuple — e.g. two ``fdm`` queries differing only in minsup)
+    run as ONE fused device dispatch (``GridRuntime.run_many`` merges
+    their DAGs under shared ``batch_key``s), digest-identical to serial
+    per-group execution, with measured device time apportioned per
+    request; the ledger reports ``exec_groups`` / ``fused_requests`` /
+    ``device_dispatches`` per wave.
   * **versioned result cache** — completed results are cached under
     ``(dataset, dataset_version, app, params)``
     (``runtime.cache.ResultCache``); any append bumps the version, so a
@@ -41,6 +50,7 @@ import argparse
 import json
 import sys
 import time
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Any
 
@@ -58,7 +68,7 @@ from repro.workflow.requests import (
     coalesce,
     request_ids,
 )
-from repro.workflow.sitejob import SiteJob, timed
+from repro.workflow.sitejob import SiteJob, timed, timed_batch
 
 # the ONE source of truth for the app family is the workload registry;
 # this module adds no app knowledge of its own
@@ -108,6 +118,8 @@ class MiningService:
         count_backend: str = "jnp",
         use_kernel: bool = False,
         clock=time.monotonic,
+        fuse_requests: bool = True,
+        failure_memo_capacity: int = 128,
     ):
         if runtime is None:
             runtime = GridRuntime(
@@ -128,9 +140,27 @@ class MiningService:
         self._results: dict[int, Any] = {}
         self._datasets: dict[str, _Dataset] = {}
         self._clock = clock
-        self.executions = 0  # backend runs actually dispatched
+        self.executions = 0  # execution groups actually run (fused or not)
         self.coalesced = 0  # requests served by another request's run
         self.invalid = 0  # submissions rejected by param validation
+        self.rejected_full = 0  # submissions rejected by a full tenant queue
+        # cross-request batching ledger: distinct execution groups that
+        # reached the dispatch stage, requests served by a fused
+        # multi-group dispatch, and engine invocations actually made
+        # (fusion drives device_dispatches < executions)
+        self.fuse_requests = bool(fuse_requests)
+        self.exec_groups = 0
+        self.fused_requests = 0
+        self.device_dispatches = 0
+        # failed-execution ledger: real failed attempts, plus the
+        # short-circuits served from the failure memo — a bounded map
+        # keyed by the full execution key (dataset VERSION included, so
+        # any append invalidates the memo by key construction: TTL = the
+        # dataset version)
+        self.failures = 0
+        self.failure_memo_hits = 0
+        self._failure_memo: OrderedDict[tuple, str] = OrderedDict()
+        self._failure_memo_cap = int(failure_memo_capacity)
         # tenant pick order, for the fairness audit (CI gates a prefix
         # bound on this while every tenant stays backlogged)
         self.pick_log: list[str] = []
@@ -225,7 +255,17 @@ class MiningService:
             self.invalid += 1
             raise
         self._requests[req.request_id] = req
-        self.queues.push(req)  # may raise QueueFullError (req marked rejected)
+        try:
+            self.queues.push(req)  # marks req rejected on a full queue
+        except QueueFullError as e:
+            # unify with the param-rejection path: a queue-full rejection
+            # is a LEDGERED terminal state too — reason and finish time
+            # set, counted service-level (it would otherwise report
+            # service_s == 0.0 with no error and no counter)
+            req.error = f"{type(e).__name__}: {e}"
+            req.finished_at = self._clock()
+            self.rejected_full += 1
+            raise
         return req.request_id
 
     def poll(self, request_id: int) -> str:
@@ -249,8 +289,12 @@ class MiningService:
 
     def step(self, max_requests: int = 8) -> list[int]:
         """One dispatch wave: fair-pick up to ``max_requests`` queued
-        requests, coalesce identical ones, serve from cache or execute.
-        Returns the ids completed (done or failed) this wave."""
+        requests, coalesce identical ones, serve from cache (or the
+        failure memo), then bucket the remaining execution groups by
+        their workload's cross-request batch signature — same-signature
+        groups run as ONE fused device dispatch, everything else runs
+        serially per group.  Returns the ids completed (done or failed)
+        this wave."""
         batch = self.queues.pick_batch(max_requests)
         now = self._clock()
         for req in batch:
@@ -259,7 +303,8 @@ class MiningService:
             req.dataset_version = self._datasets[req.dataset].version
             self.pick_log.append(req.tenant)
         finished: list[int] = []
-        for _, reqs in coalesce(batch, self._exec_key).items():
+        pending: list[tuple[tuple, tuple, list[MiningRequest]]] = []
+        for ekey, reqs in coalesce(batch, self._exec_key).items():
             rep = reqs[0]
             for other in reqs[1:]:
                 other.coalesced_into = rep.request_id
@@ -268,22 +313,22 @@ class MiningService:
             value = self.cache.get(ckey)
             if value is not None:
                 self._finish(reqs, value, compute_s=0.0, backend="cache", cache_hit=True)
-            else:
-                try:
-                    value, compute_s, backend = self._execute(rep)
-                except Exception as e:  # noqa: BLE001 — one bad request must not kill the service
-                    err = f"{type(e).__name__}: {e}"
-                    tf = self._clock()
-                    for req in reqs:
-                        req.status = "failed"
-                        req.error = err
-                        req.finished_at = tf
-                        finished.append(req.request_id)
-                    continue
-                self.cache.put(ckey, value)
-                self.executions += 1
-                self._finish(reqs, value, compute_s=compute_s, backend=backend, cache_hit=False)
-            finished.extend(r.request_id for r in reqs)
+                finished.extend(r.request_id for r in reqs)
+                continue
+            memo_err = self._failure_memo.get(ekey)
+            if memo_err is not None:
+                # a deterministically-failing request resubmitted by a
+                # polling tenant short-circuits here instead of paying a
+                # full grid run every wave; the memo key includes the
+                # dataset version, so any append retries for real
+                self.failure_memo_hits += 1
+                self._fail(reqs, memo_err, backend="failure-memo")
+                finished.extend(r.request_id for r in reqs)
+                continue
+            pending.append((ekey, ckey, reqs))
+        self.exec_groups += len(pending)
+        for bucket in self._fuse_buckets(pending):
+            finished.extend(self._run_bucket(bucket))
         return finished
 
     def drain(self, max_requests: int = 8, max_steps: int | None = None) -> list[int]:
@@ -298,7 +343,10 @@ class MiningService:
                 break
         return done
 
-    def _finish(self, reqs, value, *, compute_s: float, backend: str, cache_hit: bool) -> None:
+    def _finish(
+        self, reqs, value, *, compute_s: float, backend: str, cache_hit: bool,
+        fused: bool = False,
+    ) -> None:
         tf = self._clock()
         share = compute_s / len(reqs)
         for req in reqs:
@@ -307,9 +355,172 @@ class MiningService:
             req.cache_hit = cache_hit
             req.backend = backend
             req.compute_s = share
+            req.fused = fused
             self._results[req.request_id] = value
 
+    def _fail(
+        self, reqs, err: str, *, backend: str | None = None, attempt_s: float = 0.0,
+    ) -> None:
+        """Terminal failure for one execution group — the attempt is
+        LEDGERED like a completion: reason, finish time, the backend that
+        ran (or "failure-memo" for short-circuits) and the attempt's wall
+        time apportioned as the group's compute share."""
+        tf = self._clock()
+        share = attempt_s / max(len(reqs), 1)
+        for req in reqs:
+            req.status = "failed"
+            req.error = err
+            req.finished_at = tf
+            if backend is not None:
+                req.backend = backend
+            req.compute_s = share
+
+    def _memo_failure(self, ekey: tuple, err: str) -> None:
+        self.failures += 1
+        self._failure_memo[ekey] = err
+        while len(self._failure_memo) > self._failure_memo_cap:
+            self._failure_memo.popitem(last=False)
+
     # -- execution ------------------------------------------------------------
+
+    def _fuse_signature(self, rep: MiningRequest):
+        """The workload's cross-request batch signature for one execution
+        group's representative, or None when the group must run solo
+        (fusion disabled, no ``exec_batch_key`` hook, or the hook opted
+        this param point out)."""
+        if not self.fuse_requests:
+            return None
+        spec = get_workload(rep.app)
+        if spec.exec_batch_key is None:
+            return None
+        p = spec.resolve(rep.params)
+        if "n_sites" in p and p["n_sites"] is None:
+            p = {**p, "n_sites": self.n_sites}
+        return spec.exec_batch_key(self._datasets[rep.dataset], p)
+
+    def _fuse_buckets(self, pending) -> list[list]:
+        """Bucket the wave's pending execution groups: groups sharing
+        (app, dataset, version, exec_batch_key signature) fuse into one
+        dispatch; signature-None groups each get their own bucket.
+        First-seen order — deterministic given the pick order."""
+        buckets: OrderedDict[Any, list] = OrderedDict()
+        for ekey, ckey, reqs in pending:
+            rep = reqs[0]
+            try:
+                sig = self._fuse_signature(rep)
+            except Exception:  # noqa: BLE001 — a bad signature hook must not kill the wave
+                sig = None
+            if sig is None:
+                bkey = ("solo", rep.request_id)
+            else:
+                bkey = (rep.app, rep.dataset, rep.dataset_version, sig)
+            buckets.setdefault(bkey, []).append((ekey, ckey, reqs))
+        return list(buckets.values())
+
+    def _run_bucket(self, bucket: list) -> list[int]:
+        """Execute one bucket of same-signature execution groups: >= 2
+        groups attempt ONE fused dispatch (falling back to serial
+        per-group execution if the fused attempt throws — fusion is an
+        optimization, never a correctness dependency); solo groups run
+        the serial path directly."""
+        if len(bucket) >= 2:
+            try:
+                return self._execute_fused(bucket)
+            except Exception:  # noqa: BLE001 — fall back to per-group serial
+                pass
+        finished: list[int] = []
+        for ekey, ckey, reqs in bucket:
+            rep = reqs[0]
+            if rep.status == "done":
+                # a fused attempt that threw mid-completion (e.g. in a
+                # finalize hook) may have finished earlier groups already
+                finished.extend(r.request_id for r in reqs)
+                continue
+            t0 = self._clock()
+            self.device_dispatches += 1
+            try:
+                value, compute_s, backend = self._execute(rep)
+            except Exception as e:  # noqa: BLE001 — one bad request must not kill the service
+                err = f"{type(e).__name__}: {e}"
+                self._memo_failure(ekey, err)
+                self._fail(reqs, err, backend=self.backend_name,
+                           attempt_s=self._clock() - t0)
+                finished.extend(r.request_id for r in reqs)
+                continue
+            self._complete_group(ckey, reqs, value, compute_s, backend, fused=False)
+            finished.extend(r.request_id for r in reqs)
+        return finished
+
+    def _complete_group(
+        self, ckey, reqs, value, compute_s: float, backend: str, *, fused: bool,
+    ) -> None:
+        rep = reqs[0]
+        spec = get_workload(rep.app)
+        if fused and spec.finalize is not None:
+            # serial execution finalizes inside _execute; the fused path
+            # folds state back here, per group in wave order
+            spec.finalize(self._datasets[rep.dataset], spec.resolve(rep.params), value)
+        self.cache.put(ckey, value)
+        self.executions += 1
+        if fused:
+            self.fused_requests += len(reqs)
+        self._finish(reqs, value, compute_s=compute_s, backend=backend,
+                     cache_hit=False, fused=fused)
+
+    def _execute_fused(self, bucket: list) -> list[int]:
+        """ONE device dispatch for >= 2 same-signature execution groups.
+        Grid workloads merge their SiteJob DAGs through
+        ``GridRuntime.run_many`` (shared ``batch_key``s fuse the fan-outs
+        across requests); local workloads run their per-group callables
+        as one merged engine run.  Measured device time is apportioned
+        per request exactly like ``timed_batch`` does per job."""
+        reps = [reqs[0] for _, _, reqs in bucket]
+        spec = get_workload(reps[0].app)
+        ds = self._datasets[reps[0].dataset]
+        self.device_dispatches += 1
+        if spec.runner == "grid":
+            datas, plists = [], []
+            for rep in reps:
+                p = spec.resolve(rep.params)
+                datas.append(spec.site_split(ds, p, self))
+                plists.append(spec.grid_params(p, self))
+            runs = self.runtime.run_many(reps[0].app, datas, plists)
+            values = [(r.result, r.compute_s, r.backend) for r in runs]
+        else:
+            values = self._run_many_local(reps, spec, ds)
+        finished: list[int] = []
+        for (_ekey, ckey, reqs), (value, compute_s, backend) in zip(bucket, values):
+            self._complete_group(ckey, reqs, value, compute_s, backend, fused=True)
+            finished.extend(r.request_id for r in reqs)
+        return finished
+
+    def _run_many_local(self, reps, spec, ds) -> list[tuple[Any, float, str]]:
+        """Merged engine run for >= 2 local (delta-served) execution
+        groups: one single-job DAG per group, all sharing a ``batch_key``
+        so the batched backend serves the whole wave in one call (the
+        fused fn just invokes each group's callable — the win is one
+        engine invocation, and the delta state serves every member from
+        one warm cache)."""
+        measured: dict[str, float] = {}
+
+        def fused(bargs, argss):
+            return [fn() for fn in bargs]
+
+        bfn = timed_batch(fused, measured)
+        jobs = []
+        for j, rep in enumerate(reps):
+            p = spec.resolve(rep.params)
+            fn = spec.local_fn(ds, p, self)
+            name = f"r{j}/{rep.app}"
+            jobs.append(SiteJob(name=name, fn=timed(fn, measured, name),
+                                batch_key="local", batched_fn=bfn, batch_arg=fn))
+        rep_, results = self.runtime.engine.run_site_jobs(
+            jobs, name=f"serve-{reps[0].app}-fused{len(reps)}")
+        return [
+            (results[f"r{j}/{r.app}"], rep_.job_times.get(f"r{j}/{r.app}", 0.0),
+             rep_.backend)
+            for j, r in enumerate(reps)
+        ]
 
     def _execute(self, req: MiningRequest) -> tuple[Any, float, str]:
         """Run one representative request; returns (result, measured
@@ -354,7 +565,14 @@ class MiningService:
             "backend": self.backend_name,
             "executions": self.executions,
             "coalesced": self.coalesced,
+            "exec_groups": self.exec_groups,
+            "fused_requests": self.fused_requests,
+            "device_dispatches": self.device_dispatches,
+            "failures": self.failures,
+            "failure_memo_hits": self.failure_memo_hits,
             "rejected": self.queues.rejected + self.invalid,
+            "rejected_full": self.rejected_full,
+            "rejected_invalid": self.invalid,
             "cache": {
                 "hits": self.cache.stats.hits,
                 "misses": self.cache.stats.misses,
@@ -371,7 +589,7 @@ class MiningService:
         for req in self._requests.values():
             t = out.setdefault(req.tenant, {
                 "submitted": 0, "done": 0, "failed": 0, "rejected": 0,
-                "cache_hits": 0, "coalesced": 0,
+                "cache_hits": 0, "coalesced": 0, "fused": 0,
                 "queue_wait_s": 0.0, "compute_s": 0.0, "service_s": 0.0,
             })
             t["submitted"] += 1
@@ -381,6 +599,8 @@ class MiningService:
                 t["cache_hits"] += 1
             if req.coalesced_into is not None:
                 t["coalesced"] += 1
+            if req.fused:
+                t["fused"] += 1
             t["queue_wait_s"] += req.queue_wait_s
             t["compute_s"] += req.compute_s
             t["service_s"] += req.service_s
@@ -399,6 +619,7 @@ class MiningService:
             "cache_hit": req.cache_hit,
             "coalesced_into": req.coalesced_into,
             "backend": req.backend,
+            "fused": req.fused,
             "queue_wait_s": req.queue_wait_s,
             "compute_s": req.compute_s,
             "service_s": req.service_s,
@@ -439,6 +660,7 @@ def _build_service(args) -> MiningService:
         max_depth=args.max_depth,
         count_backend="jnp",
         use_kernel=False,
+        fuse_requests=not getattr(args, "no_fuse", False),
     )
     svc.register_dataset("tx", "transactions", n_items=args.n_items)
     svc.register_dataset("pts", "points", dim=2)
@@ -450,10 +672,13 @@ def _build_service(args) -> MiningService:
 
 def _trace_bursts(args, rng: np.random.Generator) -> list[list[tuple[str, str, str, dict]]]:
     """A bursty multi-tenant trace: each burst opens with one request all
-    tenants share (coalescing fodder), then per-tenant draws from a SMALL
-    param pool, so repeats within a dataset version become cache hits.
-    The pool is the registry's smoke params — EVERY registered workload
-    (the registry-added ones included) is in the trace for free."""
+    tenants share (coalescing fodder) and — when the pool has one — a
+    same-app different-params SIBLING of it (cross-request fusion
+    fodder: the two land in the same dispatch wave with a shared batch
+    signature), then per-tenant draws from a SMALL param pool, so
+    repeats within a dataset version become cache hits.  The pool is the
+    registry's smoke params — EVERY registered workload (the
+    registry-added ones included) is in the trace for free."""
     tenants = [f"tenant{i}" for i in range(args.tenants)]
     pool = []
     for spec in workloads():
@@ -470,6 +695,11 @@ def _trace_bursts(args, rng: np.random.Generator) -> list[list[tuple[str, str, s
         shared = pool[int(rng.integers(len(pool)))]
         for t in tenants:  # the burst's shared query — first in every queue
             burst.append((t, *shared))
+        siblings = [e for e in pool if e[0] == shared[0] and e[2] != shared[2]]
+        if siblings:
+            sib = siblings[int(rng.integers(len(siblings)))]
+            for t in tenants:  # same wave as the shared query → fuses
+                burst.append((t, *sib))
         per_tenant = max(1, min(args.burst, remaining // max(len(tenants), 1)) - 1)
         for t in tenants:
             for _ in range(per_tenant):
@@ -493,9 +723,12 @@ def main(argv=None) -> int:
     ap.add_argument("--append-every", type=int, default=2,
                     help="append fresh data every N bursts (version bump)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-fuse", action="store_true",
+                    help="disable cross-request batching (the serial baseline)")
     ap.add_argument("--ledger-out", default=None, help="write the JSON ledger here")
     ap.add_argument("--check", action="store_true",
-                    help="assert fairness bound, cache hits and coalescing (CI gate)")
+                    help="assert fairness bound, cache hits, coalescing and "
+                         "cross-request fusion (CI gate)")
     args = ap.parse_args(argv)
 
     rng = np.random.default_rng(args.seed)
@@ -536,6 +769,10 @@ def main(argv=None) -> int:
     print(f"[serve] executions={led['executions']} coalesced={led['coalesced']} "
           f"cache hits={led['cache']['hits']} misses={led['cache']['misses']} "
           f"hit_rate={led['cache']['hit_rate']:.2f}")
+    print(f"[serve] exec_groups={led['exec_groups']} "
+          f"device_dispatches={led['device_dispatches']} "
+          f"fused_requests={led['fused_requests']} "
+          f"failures={led['failures']} memo_hits={led['failure_memo_hits']}")
     print(f"[serve] throughput={len(done) / max(wall, 1e-9):.1f} req/s "
           f"latency p50={np.percentile(lat, 50) * 1e3:.1f}ms "
           f"p95={np.percentile(lat, 95) * 1e3:.1f}ms")
@@ -561,11 +798,17 @@ def main(argv=None) -> int:
             problems.append("expected coalesced identical requests, got 0")
         if not fairness_ok:
             problems.append("fairness bound violated: " + "; ".join(fairness_detail))
+        if not args.no_fuse and led["device_dispatches"] >= led["executions"]:
+            problems.append(
+                "expected cross-request fusion to drop device dispatches below "
+                f"executions, got {led['device_dispatches']} >= {led['executions']}"
+            )
         if problems:
             for p in problems:
                 print(f"[serve] CHECK FAILED: {p}", file=sys.stderr)
             return 1
-        print("[serve] checks passed: fairness bound, cache hits, coalescing")
+        print("[serve] checks passed: fairness bound, cache hits, coalescing, "
+              "cross-request fusion")
     return 0
 
 

@@ -94,6 +94,21 @@ class RuntimeRun:
         return overhead_pct(self.report.wall_s, est)
 
 
+@dataclass
+class FusedRun:
+    """One request's slice of a cross-request fused run
+    (:meth:`GridRuntime.run_many`): its own mining result, its share of
+    the measured device compute (summed from the merged report's per-job
+    times under this request's name prefix), and the shared
+    :class:`RunReport` of the ONE engine invocation that served every
+    member."""
+
+    result: Any
+    compute_s: float
+    backend: str
+    report: RunReport
+
+
 class GridRuntime:
     """Maps SiteJobs from the core algorithms onto one grid scheduler.
 
@@ -293,6 +308,78 @@ class GridRuntime:
         jobs, mode = spec.build_jobs(data, p, ctx)
         rep, results = self.engine.run_site_jobs(jobs, name=spec.name)
         return self._finish_run(jobs, rep, results[spec.terminal], measured, mode)
+
+    def run_many(self, app: str, datas: list, params_list: list) -> list[FusedRun]:
+        """Run SEVERAL same-app requests as ONE engine invocation — the
+        cross-request batching seam the serving layer dispatches through.
+
+        Each request's SiteJob DAG is built independently (its own
+        resolved params, its own closures/ledgers) and merged into one
+        job list under a ``r{j}/`` name prefix; ``batch_key``s are left
+        UNPREFIXED, so same-shape fan-out jobs from different requests
+        land in the same wave groups and the batched backend executes
+        them as one fused dispatch (the builders' batch args carry every
+        request-specific value — thresholds, PRNG keys, delta states —
+        so the first member's closure can serve the whole merged group).
+        The caller is responsible for only merging requests whose
+        workload reports the same ``exec_batch_key`` signature; anything
+        that varies job shapes or jit-static arguments must stay in
+        separate calls.
+
+        Returns one :class:`FusedRun` per request, in order: its own
+        terminal result plus its measured device-compute share (the sum
+        of the merged report's per-job times under its prefix — the same
+        apportioning ``timed_batch`` does per job within a fused group).
+        """
+        spec = get_workload(app)
+        if spec.runner != "grid":
+            raise ValueError(
+                f"app {app!r} is a {spec.runner!r} workload, not a grid DAG; "
+                "serve it through launch.serve.MiningService"
+            )
+        if len(datas) != len(params_list):
+            raise ValueError(
+                f"run_many: {len(datas)} datasets vs {len(params_list)} param sets"
+            )
+        all_jobs: list = []
+        modes: list[str] = []
+        for j, (data, params) in enumerate(zip(datas, params_list)):
+            p = spec.resolve(params)
+            ctx = RunContext(
+                measured={},
+                count_backend=self.count_backend,
+                use_kernel=self.use_kernel,
+                cluster_sync=self._cluster_sync,
+            )
+            jobs, mode = spec.build_jobs(data, p, ctx)
+            modes.append(mode)
+            prefix = f"r{j}/"
+            for job in jobs:
+                job.name = prefix + job.name
+                job.deps = [prefix + d for d in job.deps]
+            all_jobs.extend(jobs)
+        if len(set(modes)) > 1:
+            raise RuntimeError(
+                f"run_many: requests resolved to different sync modes {modes}"
+            )
+        rep, results = self.engine.run_site_jobs(
+            all_jobs, name=f"{spec.name}x{len(datas)}"
+        )
+        outs: list[FusedRun] = []
+        for j in range(len(datas)):
+            prefix = f"r{j}/"
+            compute = sum(
+                t for name, t in rep.job_times.items() if name.startswith(prefix)
+            )
+            outs.append(
+                FusedRun(
+                    result=results[prefix + spec.terminal],
+                    compute_s=compute,
+                    backend=rep.backend,
+                    report=rep,
+                )
+            )
+        return outs
 
     def run_vclustering(
         self, key: jax.Array, xs, cfg: VClusterConfig | None = None

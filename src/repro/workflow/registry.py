@@ -137,7 +137,22 @@ class WorkloadSpec:
     ``local_fn(ds, params, svc)`` returns the zero-arg callable the
     service ledgers as a single-job DAG; ``finalize(ds, params, value)``
     optionally folds the result back into dataset state (k-means
-    warm-start centroids)."""
+    warm-start centroids).
+
+    ``exec_batch_key(ds, params)`` is the CROSS-REQUEST batching opt-in:
+    given the dataset state and the resolved params (``n_sites``
+    substituted by the service), it returns a hashable signature — two
+    execution groups in the same service wave whose workloads report the
+    SAME signature (same app, dataset, version, and the same signature
+    tuple) run as ONE fused dispatch through the batched backend's
+    ``batch_key`` machinery, with measured device time apportioned per
+    request.  The signature must pin every value that changes job
+    shapes, jit-static arguments, or DAG structure (``k`` levels,
+    ``n_sites``/``split_seed``, ``k_local``/``iters``); only params the
+    builders accept per-member (thresholds, seeds) may be left out.
+    ``None`` (the default, and a valid return value) means the workload
+    NEVER fuses across requests — e.g. ``kmeans``, whose warm-start
+    ``finalize`` makes serial wave order observable."""
 
     name: str
     dataset_kind: str  # "transactions" | "points"
@@ -154,6 +169,9 @@ class WorkloadSpec:
     # local runner pieces
     local_fn: Callable | None = None
     finalize: Callable | None = None
+    # cross-request batching opt-in: (ds, resolved_params) -> hashable
+    # signature, or None to never fuse (see class docstring)
+    exec_batch_key: Callable | None = None
     smoke_params: tuple[dict, ...] = ()
     conformance: bool = False  # part of the cross-backend conformance matrix
 
@@ -275,6 +293,8 @@ def validate_registry() -> list[str]:
         else:
             if not callable(spec.local_fn):
                 problems.append(f"{where}: local workload missing local_fn")
+        if spec.exec_batch_key is not None and not callable(spec.exec_batch_key):
+            problems.append(f"{where}: exec_batch_key must be callable or None")
         if not spec.smoke_params:
             problems.append(f"{where}: declares no smoke_params")
         for sp in spec.smoke_params:
@@ -368,6 +388,15 @@ def _mine_grid_params(p, svc) -> dict:
     return {"k": p["k"], "minsup": p["minsup"]}
 
 
+def _mine_exec_key(ds, p) -> tuple:
+    """Threshold-only cross-request variation for the level-synchronous
+    miners (fdm / gfm / cd_apriori): ``k`` pins the DAG depth and
+    ``n_sites``/``split_seed`` pin the padded site shapes, so two groups
+    sharing this signature differ only in support thresholds — which the
+    builders' fused fan-outs accept per member."""
+    return (p["k"], p["n_sites"], p["split_seed"])
+
+
 # -- apriori (local, delta-served) ------------------------------------------
 
 
@@ -377,6 +406,19 @@ def _apriori_local(ds, p, svc):
     else:
         mc = max(1, int(math.ceil(p["minsup"] * ds.delta.n_tx)))
     return lambda: ds.delta.query(p["k"], mc)
+
+
+def _delta_exec_key(ds, p) -> tuple:
+    """Delta-served local workloads (apriori / topk) fuse UNconditionally:
+    every param point is accepted per member, because the fused local
+    path just invokes each group's callable in wave order inside one
+    merged engine run — identical to the serial per-group path, with the
+    shared delta state serving every member from one warm cache.  kmeans
+    deliberately has NO hook: its warm-start finalize makes results
+    depend on whether a sibling's centroids landed before the callable
+    was built, so fusing would change (legitimately) order-visible
+    output."""
+    return ()
 
 
 def _digest_localmine(r) -> dict:
@@ -403,6 +445,7 @@ register(WorkloadSpec(
     result_fields=("counts", "frequent", "count_calls", "candidates_counted"),
     digest=_digest_localmine,
     local_fn=_apriori_local,
+    exec_batch_key=_delta_exec_key,
     smoke_params=({"k": 3, "minsup": 0.3}, {"k": 2, "minsup": 0.4}),
 ))
 
@@ -446,7 +489,8 @@ register(WorkloadSpec(
     terminal="decide",
     site_split=_tx_sites,
     grid_params=_mine_grid_params,
-    smoke_params=({"k": 2, "minsup": 0.35},),
+    exec_batch_key=_mine_exec_key,
+    smoke_params=({"k": 2, "minsup": 0.35}, {"k": 2, "minsup": 0.45}),
     conformance=True,
 ))
 
@@ -485,7 +529,8 @@ register(WorkloadSpec(
     terminal="collect",
     site_split=_tx_sites,
     grid_params=_mine_grid_params,
-    smoke_params=({"k": 2, "minsup": 0.35},),
+    exec_batch_key=_mine_exec_key,
+    smoke_params=({"k": 2, "minsup": 0.35}, {"k": 2, "minsup": 0.45}),
     conformance=True,
 ))
 
@@ -525,7 +570,8 @@ register(WorkloadSpec(
     terminal="collect",
     site_split=_tx_sites,
     grid_params=_mine_grid_params,
-    smoke_params=({"k": 2, "minsup": 0.35},),
+    exec_batch_key=_mine_exec_key,
+    smoke_params=({"k": 2, "minsup": 0.35}, {"k": 2, "minsup": 0.45}),
     conformance=True,
 ))
 
@@ -561,7 +607,8 @@ register(WorkloadSpec(
     result_fields=("items", "threshold", "k_max", "count_calls"),
     digest=_digest_topk,
     local_fn=_topk_local,
-    smoke_params=({"k": 2, "top": 5},),
+    exec_batch_key=_delta_exec_key,
+    smoke_params=({"k": 2, "top": 5}, {"k": 2, "top": 3}),
 ))
 
 
@@ -646,6 +693,18 @@ def _vcluster_grid_params(p, svc) -> dict:
     }
 
 
+def _vcluster_exec_key(ds, p) -> tuple | None:
+    """``k_local``/``iters`` are jit-static in the site kernels and
+    ``n_sites``/``split_seed`` pin the site shapes, so only the PRNG
+    ``seed`` may vary across fused members (the cluster fan-out threads
+    each member's key through its batch args).  Runtime callers passing
+    explicit ``key``/``cfg`` objects never fuse — those are unhashable
+    and bypass the seed/param schema entirely."""
+    if p["key"] is not None or p["cfg"] is not None:
+        return None
+    return (p["k_local"], p["iters"], p["n_sites"], p["split_seed"])
+
+
 def _digest_vclustering(r) -> dict:
     return {
         "labels": np.asarray(r.labels).astype(int).tolist(),
@@ -674,6 +733,7 @@ register(WorkloadSpec(
     terminal="collect",
     site_split=_pt_sites,
     grid_params=_vcluster_grid_params,
-    smoke_params=({"k_local": 4, "iters": 8},),
+    exec_batch_key=_vcluster_exec_key,
+    smoke_params=({"k_local": 4, "iters": 8}, {"k_local": 4, "iters": 8, "seed": 1}),
     conformance=True,
 ))

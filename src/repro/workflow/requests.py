@@ -31,6 +31,16 @@ from typing import Any
 
 REQUEST_STATES = ("queued", "running", "done", "failed", "rejected")
 
+# Hard per-cycle burst ceiling for weighted round-robin.  Normalizing a
+# fractional weight map by its smallest entry preserves ratios exactly,
+# but an extreme map like ``{a: 1.0, b: 1e-6}`` would then grant tenant
+# ``a`` a ~1e6-pick burst before the cursor ever reaches ``b`` — a
+# starvation window no ratio is worth.  Grants are therefore clamped to
+# this bound: ratios are honored exactly up to MAX_BURST:1 and saturate
+# beyond it, so within any cycle every backlogged tenant is picked at
+# least once per MAX_BURST picks of any other tenant.
+MAX_BURST = 16
+
 
 class QueueFullError(RuntimeError):
     """Admission control: the tenant's bounded queue is at capacity."""
@@ -63,6 +73,7 @@ class MiningRequest:
     coalesced_into: int | None = None  # request_id whose execution served this
     backend: str | None = None
     compute_s: float = 0.0  # this request's share of measured device compute
+    fused: bool = False  # served by a cross-request fused dispatch
     error: str | None = None
 
     @property
@@ -101,6 +112,13 @@ class TenantQueues:
     preserves the ratios exactly — ``{a: 1, b: 0.5}`` grants the same
     2:1 shares as ``{a: 2, b: 1}``.  Tenants absent from the map keep
     weight 1.0, i.e. they share like the smallest-weighted tenant.
+
+    Per-cycle grants are BOUNDED: the integer grant table derived from
+    the (normalized) weights clamps every entry to ``[1, MAX_BURST]``,
+    so an extreme map like ``{a: 1.0, b: 1e-6}`` grants ``a`` at most
+    ``MAX_BURST`` consecutive picks instead of a ~1e6-pick starvation
+    burst — ratios are preserved exactly up to ``MAX_BURST:1`` and
+    saturate beyond it (``grant_table`` exposes the realized grants).
     """
 
     def __init__(self, max_depth: int = 64, weights: dict[str, float] | None = None):
@@ -151,6 +169,19 @@ class TenantQueues:
     def _weight(self, tenant: str) -> float:
         return float(self.weights.get(tenant, 1.0))
 
+    def _grant(self, tenant: str) -> int:
+        """Integer picks-per-cycle grant: the tenant's (normalized)
+        weight rounded to an integer and clamped to ``[1, MAX_BURST]`` —
+        the bounded grant table that caps burst starvation under extreme
+        fractional weights while preserving moderate ratios exactly."""
+        return max(1, min(MAX_BURST, round(self._weight(tenant))))
+
+    def grant_table(self) -> dict[str, int]:
+        """The realized per-cycle grants for every weighted tenant
+        (unlisted tenants get 1) — what the fairness property tests and
+        the service ledger audit."""
+        return {t: self._grant(t) for t in self.weights}
+
     def pick(self) -> MiningRequest | None:
         """Pop the next request under weighted round-robin, or None when
         every queue is empty.  Deterministic: depends only on push/pick
@@ -162,7 +193,7 @@ class TenantQueues:
             self._cursor %= len(order)
             tenant = order[self._cursor]
             q = self._queues[tenant]
-            if q and self._burst < self._weight(tenant):
+            if q and self._burst < self._grant(tenant):
                 self._burst += 1
                 return q.popleft()
             self._cursor += 1

@@ -1,0 +1,346 @@
+"""Cross-request fused execution (PR: cross-request batching in the
+mining service): digest identity between ``GridRuntime.run_many`` and
+serial ``run`` across backends and schedules, service-level fusion
+counters, and regressions for the three bugfixes that ride along —
+bounded weighted-round-robin burst grants, ledgered queue-full
+rejections, and the failed-execution ledger + failure memo."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from repro.testing import given, settings, strategies as st
+
+from repro.core.apriori import TransactionDB
+from repro.data.synthetic import (
+    gaussian_mixture,
+    ibm_transactions,
+    split_sites,
+    split_transactions,
+)
+from repro.launch.serve import MiningService
+from repro.runtime.gridruntime import GridRuntime
+from repro.workflow.registry import get_workload
+from repro.workflow.requests import (
+    MAX_BURST,
+    MiningRequest,
+    QueueFullError,
+    TenantQueues,
+)
+
+DENSE = ibm_transactions(0, 60, 10)
+MINE_APPS = ("fdm", "gfm", "cd_apriori")
+
+
+def _tx_sites(n_sites: int = 2) -> list[TransactionDB]:
+    return [
+        TransactionDB.from_dense(s)
+        for s in split_transactions(DENSE, n_sites, seed=0)
+    ]
+
+
+def _rt(backend: str = "batched", schedule: str = "staged") -> GridRuntime:
+    return GridRuntime(
+        count_backend="jnp", use_kernel=False, backend=backend, schedule=schedule
+    )
+
+
+def _tx_batch(seed: int, n_tx: int = 40, n_items: int = 8) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return rng.random((n_tx, n_items)) < 0.45
+
+
+def _service(**kw) -> MiningService:
+    kw.setdefault("count_backend", "jnp")
+    kw.setdefault("use_kernel", False)
+    kw.setdefault("n_sites", 2)
+    svc = MiningService(**kw)
+    svc.register_dataset("tx", "transactions", n_items=8)
+    svc.append_transactions("tx", _tx_batch(0))
+    return svc
+
+
+# ---------------------------------------------------------------------------
+# Runtime level: run_many is digest-identical to serial run
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("schedule", ["staged", "async"])
+@pytest.mark.parametrize("backend", ["inline", "batched"])
+@pytest.mark.parametrize("app", MINE_APPS)
+def test_run_many_digest_matches_serial(app, backend, schedule):
+    """Merged-DAG execution must be bit-identical (per the workload's
+    digest, which for cd_apriori includes the ledgered communication
+    counters) to running each request alone — across both execution
+    backends and both schedulers, with minsup chosen so the members
+    exhaust at DIFFERENT levels (the per-member live/dead seam)."""
+    spec = get_workload(app)
+    sites = _tx_sites()
+    params = [{"k": 2, "minsup": 0.3}, {"k": 2, "minsup": 0.6}]
+    serial = [_rt(backend, schedule).run(app, sites, p) for p in params]
+    fused = _rt(backend, schedule).run_many(app, [sites, sites], params)
+    assert len(fused) == len(params)
+    for s_run, f_run in zip(serial, fused):
+        assert spec.digest(f_run.result) == spec.digest(s_run.result)
+        assert f_run.backend == backend
+        assert f_run.compute_s >= 0.0
+
+
+@pytest.mark.parametrize("backend", ["inline", "batched"])
+def test_run_many_vclustering_digest(backend):
+    """Different PRNG seeds fuse (threaded through batch args); each
+    member's labels/centers match its solo run exactly."""
+    spec = get_workload("vclustering")
+    pts, _ = gaussian_mixture(0, 120, 2, 3)
+    xs = split_sites(pts, 2)
+    params = [{"seed": s, "k_local": 4, "iters": 8} for s in (0, 1)]
+    serial = [_rt(backend).run("vclustering", xs, p) for p in params]
+    fused = _rt(backend).run_many("vclustering", [xs, xs], params)
+    for s_run, f_run in zip(serial, fused):
+        assert spec.digest(f_run.result) == spec.digest(s_run.result)
+
+
+def test_run_many_apportions_measured_compute():
+    rt = _rt("batched")
+    sites = _tx_sites()
+    params = [{"k": 2, "minsup": 0.3}, {"k": 2, "minsup": 0.45}]
+    runs = rt.run_many("gfm", [sites, sites], params)
+    # one engine invocation served both; each request got a positive
+    # share of its own prefixed jobs' measured time
+    assert runs[0].report is runs[1].report
+    assert sum(r.compute_s for r in runs) > 0.0
+
+
+def test_run_many_validation():
+    rt = _rt()
+    with pytest.raises(ValueError, match="param sets"):
+        rt.run_many("gfm", [_tx_sites()], [])
+    with pytest.raises(ValueError, match="local"):
+        rt.run_many("topk", [_tx_sites()], [{"k": 2, "top": 5}])
+
+
+@settings(max_examples=4, deadline=None)
+@given(
+    minsup_a=st.sampled_from([0.25, 0.35, 0.5]),
+    minsup_b=st.sampled_from([0.3, 0.45, 0.65]),
+    app=st.sampled_from(list(MINE_APPS)),
+)
+def test_fused_digest_property(minsup_a, minsup_b, app):
+    """Property form of the digest-identity invariant: ANY threshold pair
+    fuses without changing results."""
+    spec = get_workload(app)
+    sites = _tx_sites()
+    params = [{"k": 2, "minsup": minsup_a}, {"k": 2, "minsup": minsup_b}]
+    serial = [_rt().run(app, sites, p).result for p in params]
+    fused = _rt().run_many(app, [sites, sites], params)
+    for s_res, f_run in zip(serial, fused):
+        assert spec.digest(f_run.result) == spec.digest(s_res)
+
+
+# ---------------------------------------------------------------------------
+# Service level: fusion counters + result identity with fusion disabled
+# ---------------------------------------------------------------------------
+
+
+def test_service_cross_request_fusion_matches_serial():
+    queries = [
+        ("a", "fdm", {"k": 2, "minsup": 0.3}),
+        ("b", "fdm", {"k": 2, "minsup": 0.45}),
+        ("c", "fdm", {"k": 2, "minsup": 0.6}),
+        ("a", "gfm", {"k": 2, "minsup": 0.35}),
+        ("b", "gfm", {"k": 2, "minsup": 0.5}),
+    ]
+    fsvc, ssvc = _service(), _service(fuse_requests=False)
+    rids_f = [fsvc.submit(t, app, "tx", p) for t, app, p in queries]
+    rids_s = [ssvc.submit(t, app, "tx", p) for t, app, p in queries]
+    fsvc.drain(max_requests=8)
+    ssvc.drain(max_requests=8)
+    for rf, rs, (_t, app, _p) in zip(rids_f, rids_s, queries):
+        assert fsvc.poll(rf) == "done" and ssvc.poll(rs) == "done"
+        spec = get_workload(app)
+        assert spec.digest(fsvc.result(rf)) == spec.digest(ssvc.result(rs))
+    led_f, led_s = fsvc.ledger(), ssvc.ledger()
+    # one dispatch for the fdm trio, one for the gfm pair
+    assert led_f["executions"] == 5 and led_f["exec_groups"] == 5
+    assert led_f["device_dispatches"] == 2
+    assert led_f["fused_requests"] == 5
+    assert all(fsvc.request(r).fused for r in rids_f)
+    assert led_f["per_tenant"]["a"]["fused"] == 2
+    # fusion off: one engine invocation per group, nothing marked fused
+    assert led_s["device_dispatches"] == led_s["executions"] == 5
+    assert led_s["fused_requests"] == 0
+    assert not any(ssvc.request(r).fused for r in rids_s)
+
+
+def test_service_local_workload_fuses_one_engine_run():
+    fsvc, ssvc = _service(), _service(fuse_requests=False)
+    spec = get_workload("topk")
+    rf = [fsvc.submit("a", "topk", "tx", {"k": 2, "top": 5}),
+          fsvc.submit("b", "topk", "tx", {"k": 2, "top": 3})]
+    rs = [ssvc.submit("a", "topk", "tx", {"k": 2, "top": 5}),
+          ssvc.submit("b", "topk", "tx", {"k": 2, "top": 3})]
+    fsvc.step(max_requests=4)
+    ssvc.step(max_requests=4)
+    assert fsvc.device_dispatches == 1 and fsvc.executions == 2
+    assert fsvc.fused_requests == 2
+    for a, b in zip(rf, rs):
+        assert spec.digest(fsvc.result(a)) == spec.digest(ssvc.result(b))
+
+
+def test_service_fusion_respects_signature_boundaries():
+    """Different k (DAG depth) must NOT fuse — distinct signatures run as
+    separate dispatches even in one wave."""
+    svc = _service()
+    svc.submit("a", "fdm", "tx", {"k": 2, "minsup": 0.3})
+    svc.submit("b", "fdm", "tx", {"k": 3, "minsup": 0.3})
+    svc.step(max_requests=4)
+    assert svc.executions == 2
+    assert svc.device_dispatches == 2
+    assert svc.fused_requests == 0
+
+
+# ---------------------------------------------------------------------------
+# Bugfix regression: bounded weighted-round-robin burst grants
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(w=st.floats(min_value=1e-9, max_value=1e9))
+def test_grant_table_is_bounded(w):
+    q = TenantQueues(weights={"a": w, "b": 1.0})
+    for grant in q.grant_table().values():
+        assert 1 <= grant <= MAX_BURST
+
+
+def test_grant_table_preserves_moderate_ratios():
+    assert TenantQueues(weights={"big": 3.0, "small": 1.0}).grant_table() == {
+        "big": 3, "small": 1,
+    }
+    # fractional maps normalize by the smallest weight, ratios intact
+    assert TenantQueues(weights={"big": 1.0, "small": 0.25}).grant_table() == {
+        "big": 4, "small": 1,
+    }
+
+
+def test_extreme_fractional_weights_cannot_starve():
+    """{a: 1.0, b: 1e-6} used to normalize into a ~1e6-pick burst for
+    ``a`` before ``b`` was ever served; grants are now clamped to
+    MAX_BURST, so ``b`` is picked within one bounded cycle."""
+    q = TenantQueues(max_depth=64, weights={"hog": 1.0, "meek": 1e-6})
+    assert q.grant_table() == {"hog": MAX_BURST, "meek": 1}
+    for i in range(40):
+        q.push(MiningRequest(request_id=i, tenant="hog", app="x", dataset="d"))
+        q.push(MiningRequest(request_id=100 + i, tenant="meek", app="x", dataset="d"))
+    picks = [q.pick().tenant for _ in range(2 * (MAX_BURST + 1))]
+    assert "meek" in picks[: MAX_BURST + 1]
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    w_a=st.floats(min_value=1e-6, max_value=1e6),
+    w_b=st.floats(min_value=1e-6, max_value=1e6),
+)
+def test_no_starvation_under_any_weights(w_a, w_b):
+    """Fairness property: with both tenants backlogged, EVERY tenant is
+    picked within the first MAX_BURST + 1 picks, for any positive
+    weight map whatsoever."""
+    q = TenantQueues(max_depth=64, weights={"a": w_a, "b": w_b})
+    for i in range(40):
+        q.push(MiningRequest(request_id=i, tenant="a", app="x", dataset="d"))
+        q.push(MiningRequest(request_id=1000 + i, tenant="b", app="x", dataset="d"))
+    picks = [q.pick().tenant for _ in range(2 * (MAX_BURST + 1))]
+    head = picks[: MAX_BURST + 1]
+    assert "a" in head and "b" in head
+
+
+# ---------------------------------------------------------------------------
+# Bugfix regression: queue-full rejections are ledgered like param rejections
+# ---------------------------------------------------------------------------
+
+
+def test_queue_full_is_ledgered_like_param_rejection():
+    svc = _service(max_depth=1)
+    svc.submit("a", "apriori", "tx", {"k": 1, "minsup": 0.9})
+    with pytest.raises(QueueFullError, match="full"):
+        svc.submit("a", "apriori", "tx", {"k": 1, "minsup": 0.8})
+    assert svc.rejected_full == 1
+    led = svc.ledger()
+    assert led["rejected_full"] == 1
+    assert led["rejected_invalid"] == 0
+    assert led["rejected"] == 1
+    rej = [r for r in led["requests"] if r["status"] == "rejected"]
+    assert len(rej) == 1
+    # the fix: terminal state carries the reason and a finish time, like
+    # the param-rejection path (it used to leave error=None, service_s=0)
+    assert rej[0]["error"] and rej[0]["error"].startswith("QueueFullError")
+    req = svc.request(rej[0]["request_id"])
+    assert req.finished_at is not None
+    assert led["per_tenant"]["a"]["rejected"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Bugfix regression: failed executions are ledgered; failure memo with
+# TTL-by-dataset-version
+# ---------------------------------------------------------------------------
+
+BAD = {"k": 2, "minsup": 0.3, "n_sites": 0}  # valid at submit, fails at split
+
+
+def test_failed_execution_records_attempt():
+    svc = _service()
+    bad = svc.submit("a", "gfm", "tx", BAD)
+    svc.step()
+    req = svc.request(bad)
+    assert req.status == "failed" and req.error
+    # the fix: the attempt is ledgered — backend that ran and the
+    # attempt's wall-time share (it used to leave backend=None, 0.0)
+    assert req.backend == svc.backend_name
+    assert req.compute_s >= 0.0
+    assert svc.failures == 1
+    led = svc.ledger()
+    assert led["failures"] == 1 and led["failure_memo_hits"] == 0
+    assert led["per_tenant"]["a"]["failed"] == 1
+
+
+def test_failure_memo_short_circuits_resubmission():
+    svc = _service()
+    svc.submit("a", "gfm", "tx", BAD)
+    svc.step()
+    assert svc.failures == 1
+    execs = svc.executions
+    bad2 = svc.submit("a", "gfm", "tx", BAD)
+    svc.step()
+    req2 = svc.request(bad2)
+    assert req2.status == "failed" and req2.error
+    assert req2.backend == "failure-memo"
+    assert svc.failure_memo_hits == 1
+    assert svc.failures == 1  # a memo hit is not a new failure
+    assert svc.executions == execs  # no device attempt was paid
+
+
+def test_failure_memo_invalidated_by_dataset_version():
+    """TTL-by-version: the memo key includes the dataset version, so an
+    append retries the request for real instead of serving a stale
+    verdict."""
+    svc = _service()
+    svc.submit("a", "gfm", "tx", BAD)
+    svc.step()
+    svc.append_transactions("tx", _tx_batch(1))
+    bad3 = svc.submit("a", "gfm", "tx", BAD)
+    svc.step()
+    assert svc.request(bad3).backend == svc.backend_name  # a real attempt
+    assert svc.failures == 2
+    assert svc.failure_memo_hits == 0
+
+
+def test_failure_memo_is_bounded():
+    svc = _service(failure_memo_capacity=2)
+    for minsup in (0.3, 0.4, 0.5):
+        svc.submit("a", "gfm", "tx", {"k": 2, "minsup": minsup, "n_sites": 0})
+        svc.step()
+    assert svc.failures == 3
+    assert len(svc._failure_memo) == 2  # oldest entry evicted

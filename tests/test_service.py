@@ -289,7 +289,10 @@ def test_mixed_tenant_trace_ledger():
     rng = np.random.default_rng(7)
     for burst in range(3):
         for t in tenants:
-            app, params = pool[burst % len(pool)]  # shared → coalesce fodder
+            # bursts 0 and 1 share one query at the same dataset version
+            # (the append lands after burst 1): burst 0 executes it,
+            # burst 1 coalesces AND cache-hits it deterministically
+            app, params = pool[(burst // 2) % len(pool)]
             svc.submit(t, app, "tx", params)
             app, params = pool[int(rng.integers(len(pool)))]
             svc.submit(t, app, "tx", params)
